@@ -1,0 +1,81 @@
+"""Shared QAT harness for the accuracy benchmarks (Table 2 / Fig 2).
+
+Trains a small MLP classifier on the synthetic CIFAR-shaped task with
+every layer routed through the PSQ crossbar matmul — the same
+quantization pipeline the paper trains ResNet-20 with (real CIFAR-10 is
+not available offline; DESIGN.md records that accuracy claims are
+validated as *relative* trends).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import QuantConfig, apply_linear, init_linear
+from repro.data import ClassificationConfig, ClassificationStream
+
+# CIFAR-shaped but reduced input dim (4 crossbar tiles at R=128) so the
+# full 11-config accuracy ladder runs in CI time on one CPU core; the
+# quantization-severity trends are dimension-independent.
+DIM, HIDDEN, CLASSES = 512, 128, 10
+
+
+def init_mlp(key: jax.Array, quant: QuantConfig) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "l1": init_linear(k1, DIM, HIDDEN, quant, use_bias=True),
+        "l2": init_linear(k2, HIDDEN, CLASSES, quant, use_bias=True),
+    }
+
+
+def mlp_logits(params: Dict, x: jax.Array, quant: QuantConfig) -> jax.Array:
+    h, _ = apply_linear(params["l1"], x, quant)
+    h = jax.nn.relu(h)
+    y, _ = apply_linear(params["l2"], h, quant)
+    return y
+
+
+def train_qat(
+    quant: QuantConfig, steps: int = 250, batch: int = 128,
+    lr: float = 3e-3, seed: int = 0, noise: float = 0.35,
+) -> float:
+    """Returns held-out accuracy after Adam-based QAT."""
+    stream = ClassificationStream(
+        ClassificationConfig(seed=seed, train_noise=noise, dim=DIM)
+    )
+    params = init_mlp(jax.random.PRNGKey(seed), quant)
+    mu = jax.tree.map(jnp.zeros_like, params)
+    nu = jax.tree.map(jnp.zeros_like, params)
+
+    def loss_fn(p, x, y):
+        logits = mlp_logits(p, x, quant)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+    @jax.jit
+    def step(p, mu, nu, i, x, y):
+        g = jax.grad(loss_fn)(p, x, y)
+        mu = jax.tree.map(lambda m, gg: 0.9 * m + 0.1 * gg, mu, g)
+        nu = jax.tree.map(lambda v, gg: 0.999 * v + 0.001 * gg * gg, nu, g)
+        bc1 = 1 - 0.9 ** (i + 1.0)
+        bc2 = 1 - 0.999 ** (i + 1.0)
+        p = jax.tree.map(
+            lambda pp, m, v: pp - lr * (m / bc1) / (jnp.sqrt(v / bc2) + 1e-8),
+            p, mu, nu,
+        )
+        return p, mu, nu
+
+    for i in range(steps):
+        x, y = stream.batch_at(i, batch)
+        params, mu, nu = step(
+            params, mu, nu, jnp.asarray(float(i)), jnp.asarray(x), jnp.asarray(y)
+        )
+
+    # held-out eval
+    xs, ys = stream.batch_at(10_000, 2048)
+    pred = jnp.argmax(mlp_logits(params, jnp.asarray(xs), quant), axis=-1)
+    return float(jnp.mean(pred == jnp.asarray(ys)))

@@ -1,0 +1,32 @@
+"""Fig 2(d): accuracy vs number of scale factors.
+
+Fewer scale factors (coarser granularity) -> lower accuracy; the paper
+uses this to motivate keeping per-(stream x column) granularity and
+processing it in the DCiM array instead of shrinking it.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.core import QuantConfig
+from benchmarks._qat_common import train_qat
+
+
+def run(fast: bool = False) -> List[Tuple[str, float, str]]:
+    steps = 120 if fast else 250
+    rows = []
+    for gran in ["column", "per_stream", "per_tile", "per_layer"]:
+        qc = QuantConfig(mode="psq", psq_levels="ternary", xbar_rows=128,
+                         sf_granularity=gran)
+        t0 = time.time()
+        acc = train_qat(qc, steps=steps)
+        nsf = qc.num_scale_factors(3 * 32 * 32, 256)
+        rows.append((f"fig2d/{gran}", (time.time() - t0) * 1e6 / steps,
+                     f"acc={acc:.3f},n_sf={nsf}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,22 @@
+"""Fig 5(a): DCiM energy vs ternary sparsity (24% saving at 50%)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.hwmodel import dcim_column_energy_pj
+
+
+def run(fast: bool = False) -> List[Tuple[str, float, str]]:
+    rows = []
+    e0 = dcim_column_energy_pj(0.0)
+    for sp in [0.0, 0.1, 0.25, 0.5, 0.65, 0.75, 0.9]:
+        e = dcim_column_energy_pj(sp)
+        rows.append((f"fig5a/sparsity_{int(sp*100):02d}", 0.0,
+                     f"e_pj={e:.4f},reduction={1 - e / e0:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,46 @@
+"""Figs 1/6: system-level energy + latency*area, HCiM config A vs ADC
+baselines, all CIFAR workloads (normalized to HCiM ternary)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.hwmodel import SystemConfig, WORKLOADS, evaluate_workload
+
+STYLES = [
+    ("adc7", dict(style="adc", adc_bits=7)),
+    ("adc6", dict(style="adc", adc_bits=6)),
+    ("adc4", dict(style="adc", adc_bits=4)),
+    ("hcim_binary", dict(style="hcim", levels="binary")),
+    ("hcim_ternary", dict(style="hcim", levels="ternary", sparsity=0.5)),
+]
+CIFAR_WORKLOADS = ["resnet20", "resnet32", "resnet44", "wrn20", "vgg9", "vgg11"]
+
+
+def run(fast: bool = False, xbar_rows: int = 128) -> List[Tuple[str, float, str]]:
+    rows = []
+    fig = "fig6" if xbar_rows == 128 else "fig7"
+    for wl in CIFAR_WORKLOADS:
+        layers = WORKLOADS[wl]()
+        t0 = time.time()
+        res = {
+            name: evaluate_workload(
+                layers, SystemConfig(xbar_rows=xbar_rows, **kw)
+            )
+            for name, kw in STYLES
+        }
+        base = res["hcim_ternary"]
+        us = (time.time() - t0) * 1e6 / len(STYLES)
+        for name, t in res.items():
+            rows.append((
+                f"{fig}/{wl}/{name}", us,
+                f"E_rel={t.energy_pj / base.energy_pj:.2f},"
+                f"latxarea_rel={t.latency_area / base.latency_area:.2f},"
+                f"E_uJ={t.energy_pj / 1e6:.1f}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,11 @@
+"""Fig 7: same comparison with HCiM configuration B (64x64 crossbars)."""
+from benchmarks.fig6_system import run as _run
+
+
+def run(fast: bool = False):
+    return _run(fast=fast, xbar_rows=64)
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,50 @@
+"""Pallas kernel micro-bench (interpret mode: correctness-path timing
+only — TPU perf is assessed structurally via the §Roofline dry-run)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.psq_matmul import psq_matmul_kernel
+from repro.kernels.int4_matmul import int4_matmul_kernel, pack_int4
+from repro.kernels.ref import psq_matmul_ref
+
+
+def _time(f, n=3):
+    f()  # compile
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(f())
+    return (time.time() - t0) / n * 1e6
+
+
+def run(fast: bool = False) -> List[Tuple[str, float, str]]:
+    B, K, O, R = 64, 512, 256, 128
+    key = jax.random.PRNGKey(0)
+    x = jnp.round(jax.random.uniform(key, (B, K), minval=-8, maxval=7))
+    w = jnp.round(jax.random.uniform(key, (K, O), minval=-8, maxval=7))
+    import math
+    T = math.ceil(K / R)
+    sf = jnp.ones((T, 4, 4, O)) * 0.5
+    alpha = jnp.asarray(5.0)
+    kw = dict(n_a=4, n_w=4, levels="ternary", adc_bits=4, xbar_rows=R)
+    rows = []
+    us_k = _time(lambda: psq_matmul_kernel(x, w, sf, alpha, **kw))
+    us_kf = _time(lambda: psq_matmul_kernel(x, w, sf, alpha, fuse_planes=True, **kw))
+    us_r = _time(lambda: psq_matmul_ref(x, w, sf, alpha, **kw))
+    rows.append(("kernel/psq_matmul_interp", us_k, f"ref_us={us_r:.0f}"))
+    rows.append(("kernel/psq_matmul_fused", us_kf, f"loop_us={us_k:.0f}"))
+    wp = pack_int4(w)
+    scale = jnp.ones((O,))
+    us_i = _time(lambda: int4_matmul_kernel(x, wp, scale))
+    rows.append(("kernel/int4_matmul_interp", us_i,
+                 f"bytes_ratio_vs_bf16={0.5 / 2.0}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--fast`` shrinks QAT
+step counts for CI-speed runs.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig6]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    "table2_accuracy",
+    "fig2_granularity",
+    "table3_dcim_vs_adc",
+    "fig5a_sparsity",
+    "fig6_system",
+    "fig7_configB",
+    "fig5b_edap",
+    "lm_hcim_energy",
+    "kernel_bench",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failed = []
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            rows = mod.run(fast=args.fast)
+            for name, us, derived in rows:
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:
+            failed.append((mod_name, repr(e)))
+            print(f"{mod_name},-1,ERROR:{e!r}", flush=True)
+        sys.stderr.write(f"[bench] {mod_name}: {time.time() - t0:.1f}s\n")
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

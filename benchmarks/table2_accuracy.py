@@ -1,0 +1,45 @@
+"""Table 2: accuracy vs ADC precision / PSQ levels, crossbar 128 vs 64.
+
+Reproduces the paper's accuracy *trends* on the synthetic task:
+ternary (1.5-bit) within ~1.5 % of 4-bit ADC; binary ~2 % lower; the
+64-row crossbar degrades less than the 128-row one.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.core import QuantConfig, adc_baseline
+from benchmarks._qat_common import train_qat
+
+
+def run(fast: bool = False) -> List[Tuple[str, float, str]]:
+    steps = 120 if fast else 250
+    rows = []
+    t0 = time.time()
+    acc_fp = train_qat(QuantConfig(mode="none"), steps=steps)
+    rows.append(("table2/fp_baseline", (time.time() - t0) * 1e6 / steps,
+                 f"acc={acc_fp:.3f}"))
+    for rows_x in (128, 64):
+        for label, qc in [
+            ("adc7", adc_baseline(7, rows_x)),
+            ("adc6", adc_baseline(6, rows_x)),
+            ("adc4", adc_baseline(4, rows_x)),
+            ("ternary", QuantConfig(mode="psq", psq_levels="ternary",
+                                    xbar_rows=rows_x)),
+            ("binary", QuantConfig(mode="psq", psq_levels="binary",
+                                   xbar_rows=rows_x)),
+        ]:
+            t0 = time.time()
+            acc = train_qat(qc, steps=steps)
+            rows.append((
+                f"table2/{label}_x{rows_x}",
+                (time.time() - t0) * 1e6 / steps,
+                f"acc={acc:.3f},delta_fp={acc - acc_fp:+.3f}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,37 @@
+"""Table 3: per-column latency/energy/area — DCiM array vs ADCs."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.hwmodel import (
+    ADC_FLASH_4B, ADC_SAR_6B, ADC_SAR_7B, CONFIG_A, CONFIG_B, DCIM_A, DCIM_B,
+    dcim_column_energy_pj, dcim_latency_per_column_ns,
+)
+
+
+def run(fast: bool = False) -> List[Tuple[str, float, str]]:
+    rows = []
+    t0 = time.time()
+    for p, paper_lat, paper_e in [
+        (ADC_SAR_7B, 1.52, 4.10), (ADC_SAR_6B, 0.15, 0.59),
+        (ADC_FLASH_4B, 0.05, 1.86),
+    ]:
+        rows.append((f"table3/{p.name}", 0.0,
+                     f"lat_ns={p.latency_ns},e_pj={p.energy_pj},"
+                     f"area_mm2={p.area_mm2}"))
+    for cfgname, geo, per in [("dcim_a", CONFIG_A, DCIM_A),
+                              ("dcim_b", CONFIG_B, DCIM_B)]:
+        lat = dcim_latency_per_column_ns(geo)
+        e50 = dcim_column_energy_pj(0.5, per)
+        rows.append((
+            f"table3/{cfgname}", (time.time() - t0) * 1e6,
+            f"lat_ns={lat:.3f},e_pj_50sp={e50:.3f},area_mm2={per.area_mm2},"
+            f"e_ratio_vs_adc4={ADC_FLASH_4B.energy_pj / e50:.1f}x",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,46 @@
+"""Paper-faithful QAT reproduction (Table 2 trends, CIFAR recipe).
+
+Trains the synthetic CIFAR-shaped classifier with the exact §5.1 CIFAR
+quantization recipe (a4/w4/sf4, ternary/binary partial sums, crossbar
+128 vs 64) and prints the accuracy ladder next to the paper's reported
+trend. Real CIFAR-10 is unavailable offline, so the claims validated
+are *relative*: ternary ~ 4-bit ADC, binary ~2% lower, 64-row crossbars
+degrade less (DESIGN.md §3).
+
+    PYTHONPATH=src python examples/paper_repro_cifar.py [--steps 250]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core import QuantConfig, adc_baseline
+from benchmarks._qat_common import train_qat
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=250)
+    args = ap.parse_args()
+
+    runs = [
+        ("fp baseline        ", QuantConfig(mode="none")),
+        ("7-bit ADC  (x128)  ", adc_baseline(7, 128)),
+        ("4-bit ADC  (x128)  ", adc_baseline(4, 128)),
+        ("ternary 1.5b (x128)", QuantConfig(mode="psq", psq_levels="ternary",
+                                            xbar_rows=128)),
+        ("ternary 1.5b (x64) ", QuantConfig(mode="psq", psq_levels="ternary",
+                                            xbar_rows=64)),
+        ("binary 1b   (x128) ", QuantConfig(mode="psq", psq_levels="binary",
+                                            xbar_rows=128)),
+    ]
+    print("config                acc    (paper ResNet-20 trend: 92.3 / 90.2 /"
+          " 88.8 / 89.8(x64) / 86.3)")
+    for name, qc in runs:
+        acc = train_qat(qc, steps=args.steps)
+        print(f"{name} {acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Quickstart: train a tiny PSQ-quantized LM end to end on CPU.
+
+Shows the paper's pipeline in one file: an LM whose every matmul runs
+through the HCiM crossbar model (ternary partial sums + learned
+fixed-point scale factors), trained with PSQ-QAT, with the ternary
+sparsity statistic the DCiM energy model consumes.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.config import QuantConfig
+from repro.data import DataConfig, TokenStream
+from repro.models import forward, init_model, loss_fn
+from repro.train import OptConfig, adamw_update, init_opt_state
+
+
+def main():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    cfg = dataclasses.replace(
+        cfg, n_layers=2,
+        quant=QuantConfig(mode="psq", psq_levels="ternary", xbar_rows=64,
+                          collect_stats=True),
+    )
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    opt_cfg = OptConfig(lr=2e-3, warmup_steps=10, total_steps=60,
+                        quant_lr_mult=0.2)
+    opt = init_opt_state(params)
+    stream = TokenStream(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                    global_batch=8))
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, stats), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch), has_aux=True
+        )(params)
+        params, opt, _ = adamw_update(opt_cfg, params, grads, opt)
+        return params, opt, loss, stats.get("p_zero_frac", 0.0)
+
+    for i in range(60):
+        batch = {k: jnp.asarray(v) for k, v in stream.batch_at(i).items()}
+        params, opt, loss, pz = step(params, opt, batch)
+        if i % 10 == 0:
+            print(f"step {i:3d}  loss {float(loss):.4f}  "
+                  f"ternary-sparsity {float(pz):.2%}")
+    print("\nPSQ-QAT works: loss decreased with 1.5-bit partial sums, and")
+    print(f"~{float(pz):.0%} of comparator outputs are zero — the sparsity")
+    print("HCiM's DCiM clock gating converts into the Fig. 5(a) energy win.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""End-to-end training driver: fault-tolerant LM training with PSQ.
+
+Defaults to a ~25M-parameter tinyllama-family model that trains a few
+hundred steps in CPU-minutes; ``--preset 100m`` scales to the ~100M
+configuration for real hardware. Demonstrates the full substrate:
+deterministic data, AdamW + cosine schedule, atomic checkpointing with
+auto-resume, failure injection + restart, straggler monitoring.
+
+    PYTHONPATH=src python examples/train_lm_psq.py --steps 200
+    PYTHONPATH=src python examples/train_lm_psq.py --quant psq --steps 100
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.core.config import PSQ_TERNARY, QuantConfig
+from repro.data import DataConfig, TokenStream
+from repro.train import FailureInjector, OptConfig, Trainer, TrainerConfig
+
+PRESETS = {
+    # (d_model, n_layers, n_heads, kv, d_ff, vocab, seq, batch)
+    "tiny": (256, 4, 8, 4, 704, 2048, 256, 8),     # ~3M, CPU-seconds/step
+    "25m": (512, 8, 8, 4, 1408, 8192, 256, 8),     # ~25M
+    "100m": (768, 12, 12, 4, 2048, 32000, 1024, 32),  # ~100M (hardware)
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=PRESETS)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--quant", default="none", choices=["none", "psq", "binary"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--inject-failure", type=int, default=-1,
+                    help="simulate a node failure at this step")
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    d, L, h, kv, ff, vocab, seq, batch = PRESETS[args.preset]
+    cfg = dataclasses.replace(
+        get_config("tinyllama-1.1b"),
+        d_model=d, n_layers=L, n_heads=h, n_kv_heads=kv, d_ff=ff,
+        vocab_size=vocab, head_dim=d // h,
+    )
+    if args.quant != "none":
+        q = PSQ_TERNARY if args.quant == "psq" else dataclasses.replace(
+            PSQ_TERNARY, psq_levels="binary")
+        cfg = cfg.with_quant(dataclasses.replace(q, xbar_rows=64))
+
+    stream = TokenStream(DataConfig(vocab_size=vocab, seq_len=seq,
+                                    global_batch=batch))
+    injector = (FailureInjector(fail_at_steps=(args.inject_failure,))
+                if args.inject_failure >= 0 else None)
+    trainer = Trainer(
+        cfg,
+        OptConfig(lr=3e-4, warmup_steps=max(args.steps // 20, 5),
+                  total_steps=args.steps),
+        TrainerConfig(total_steps=args.steps, ckpt_every=max(args.steps // 4, 10),
+                      log_every=10, ckpt_dir=args.ckpt_dir,
+                      compress_grads=args.compress_grads),
+        data_fn=stream.batch_at,
+        injector=injector,
+    )
+    trainer.train()
+    h0, h1 = trainer.metrics_history[0], trainer.metrics_history[-1]
+    print(f"\nloss {h0['loss']:.3f} -> {h1['loss']:.3f} over "
+          f"{args.steps} steps ({args.preset}, quant={args.quant})")
+
+
+if __name__ == "__main__":
+    main()

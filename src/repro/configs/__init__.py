@@ -1,0 +1,32 @@
+"""Architecture registry: --arch <id> resolves here."""
+from typing import Dict, List
+
+from repro.configs.base import ArchConfig
+from repro.configs.starcoder2_3b import CONFIG as _starcoder2
+from repro.configs.qwen3_14b import CONFIG as _qwen3
+from repro.configs.tinyllama_1_1b import CONFIG as _tinyllama
+from repro.configs.h2o_danube_3_4b import CONFIG as _danube
+from repro.configs.zamba2_7b import CONFIG as _zamba2
+from repro.configs.arctic_480b import CONFIG as _arctic
+from repro.configs.granite_moe_3b_a800m import CONFIG as _granite
+from repro.configs.xlstm_350m import CONFIG as _xlstm
+from repro.configs.whisper_large_v3 import CONFIG as _whisper
+from repro.configs.llava_next_mistral_7b import CONFIG as _llava
+
+ARCHS: Dict[str, ArchConfig] = {
+    c.name: c
+    for c in [
+        _starcoder2, _qwen3, _tinyllama, _danube, _zamba2,
+        _arctic, _granite, _xlstm, _whisper, _llava,
+    ]
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch '{name}'; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def list_archs() -> List[str]:
+    return sorted(ARCHS)

@@ -1,0 +1,11 @@
+"""Snowflake Arctic-480B [hf:Snowflake/snowflake-arctic-base]:
+128-expert top-2 MoE with a parallel dense residual FFN."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="arctic-480b", family="moe",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8, d_ff=4864,
+    vocab_size=32000, head_dim=128,
+    n_experts=128, moe_top_k=2, moe_d_ff=4864, dense_residual=True,
+    moe_chunk=2048,
+)

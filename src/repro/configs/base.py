@@ -1,0 +1,124 @@
+"""Architecture configuration schema for the assigned model pool."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.config import DENSE, QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    # attention flavor
+    qk_norm: bool = False
+    sliding_window: int = 0        # 0 = full attention
+    rope_theta: float = 10000.0
+    attn_bias: bool = False
+    norm_type: str = "rmsnorm"     # rmsnorm | layernorm
+    act: str = "swiglu"            # swiglu | gelu
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    dense_residual: bool = False   # arctic: dense FFN in parallel with MoE
+    moe_chunk: int = 4096
+    moe_impl: str = "dispatch"     # dispatch | dense (weighted-dense mixture)
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    attn_every: int = 0            # hybrid: shared attn block period (zamba2)
+    # xLSTM
+    slstm_every: int = 0           # xlstm: sLSTM block period
+    xlstm_proj_factor: float = 2.0
+    # encoder-decoder
+    n_enc_layers: int = 0
+    # modality frontend stub ("none" | "audio" | "vision")
+    frontend: str = "none"
+    frontend_len: int = 0          # stub embedding positions per sample
+    # capability flags
+    subquadratic: bool = False     # can serve long_500k
+    has_decoder: bool = True
+    # execution
+    quant: QuantConfig = DENSE
+    remat: str = "none"            # none | block (activation checkpointing)
+    attn_impl: str = "naive"       # naive | flash (chunked online softmax)
+    compute_dtype: str = "f32"     # f32 | bf16 (activation/compute dtype)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def with_quant(self, quant: QuantConfig) -> "ArchConfig":
+        return dataclasses.replace(self, quant=quant)
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks), for 6ND math."""
+        d, hd = self.d_model, self.resolved_head_dim
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+        if self.act == "swiglu":
+            mlp = 3 * d * self.d_ff
+        else:
+            mlp = 2 * d * self.d_ff
+        per_layer = 0
+        n_attn_layers = self.n_layers
+        if self.family == "moe":
+            e_ff = self.moe_d_ff or self.d_ff
+            moe = self.n_experts * 3 * d * e_ff + d * self.n_experts
+            per_layer = attn + moe + (3 * d * e_ff if self.dense_residual else 0)
+            total_blocks = self.n_layers * per_layer
+        elif self.family == "hybrid":
+            di = self.ssm_expand * d
+            mamba = d * (2 * di + 2 * self.ssm_state + di // self.ssm_head_dim) + di * d
+            n_attn = self.n_layers // max(self.attn_every, 1)
+            # zamba2: ONE shared attn+mlp block reused at every attn slot
+            total_blocks = self.n_layers * mamba + (attn + mlp)
+        elif self.family == "ssm":
+            di = int(self.xlstm_proj_factor * d)
+            hd = di // self.n_heads
+            # q/k/v are block-diagonal per head in xLSTM
+            mlstm = d * 2 * di + 3 * self.n_heads * hd * hd + di * d
+            total_blocks = self.n_layers * mlstm
+        else:
+            per_layer = attn + mlp
+            total_blocks = self.n_layers * per_layer
+            if self.family == "encdec":
+                total_blocks += self.n_enc_layers * (attn + mlp) + self.n_layers * attn
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return total_blocks + emb
+
+    # ------------------------------------------------------------------
+    def reduced(self) -> "ArchConfig":
+        """Small same-family config for CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            n_layers=min(self.n_layers, 3 if self.attn_every == 0 else 7),
+            n_enc_layers=min(self.n_enc_layers, 2),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            head_dim=32,
+            d_ff=256 if self.d_ff else 0,
+            vocab_size=256,
+            n_experts=min(self.n_experts, 8),
+            moe_top_k=min(self.moe_top_k, 2),
+            moe_d_ff=128 if self.moe_d_ff else 0,
+            moe_chunk=64,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=32 if self.ssm_state else 64,
+            attn_every=3 if self.attn_every else 0,
+            slstm_every=2 if self.slstm_every else 0,
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            frontend_len=min(self.frontend_len, 16) if self.frontend_len else 0,
+        )

@@ -1,0 +1,9 @@
+"""IBM Granite-MoE-3B-A800M [hf:ibm-granite]: 40 experts, top-8."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-3b-a800m", family="moe",
+    n_layers=32, d_model=1536, n_heads=24, n_kv_heads=8, d_ff=512,
+    vocab_size=49155, head_dim=64,
+    n_experts=40, moe_top_k=8, moe_d_ff=512, tie_embeddings=True,
+)

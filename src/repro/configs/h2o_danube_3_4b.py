@@ -1,0 +1,13 @@
+"""H2O-Danube-3-4B [arXiv:2401.16818]: llama+mistral mix with SWA.
+
+Sliding-window attention (4096) makes prefill sub-quadratic and decode
+attention O(window), so this arch serves the long_500k cell.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="h2o-danube-3-4b", family="dense",
+    n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8, d_ff=10240,
+    vocab_size=32000, head_dim=120,
+    sliding_window=4096, subquadratic=True,
+)

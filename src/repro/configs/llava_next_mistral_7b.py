@@ -1,0 +1,11 @@
+"""LLaVA-NeXT (mistral-7b backbone) [hf:llava-hf/llava-v1.6-mistral-7b]:
+dense decoder consuming stub anyres patch embeddings (frontend_len
+positions prepended; the vision tower itself is out of scope)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-mistral-7b", family="vlm",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=14336,
+    vocab_size=32000, head_dim=128,
+    frontend="vision", frontend_len=576,
+)

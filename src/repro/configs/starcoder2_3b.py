@@ -1,0 +1,10 @@
+"""StarCoder2-3B [arXiv:2402.19173; hf]: GQA(kv=2), RoPE, GELU, LN, bias."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-3b", family="dense",
+    n_layers=30, d_model=3072, n_heads=24, n_kv_heads=2, d_ff=12288,
+    vocab_size=49152, head_dim=128,
+    norm_type="layernorm", act="gelu", attn_bias=True,
+    rope_theta=1e5, tie_embeddings=True,
+)

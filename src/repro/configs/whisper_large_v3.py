@@ -1,0 +1,17 @@
+"""Whisper-large-v3 backbone [arXiv:2212.04356]: 32-layer encoder +
+32-layer decoder with cross attention. The conv/audio frontend is a STUB:
+input_specs() supplies precomputed frame embeddings (B, S, d).
+
+Adaptation note (DESIGN.md): the backbone uses RoPE in place of whisper's
+learned/sinusoidal absolute positions — the assigned spec covers the
+transformer backbone only.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-large-v3", family="encdec",
+    n_layers=32, n_enc_layers=32, d_model=1280, n_heads=20, n_kv_heads=20,
+    d_ff=5120, vocab_size=51866, head_dim=64,
+    norm_type="layernorm", act="gelu", attn_bias=True,
+    frontend="audio",
+)

@@ -1,0 +1,10 @@
+"""xLSTM-350M [arXiv:2405.04517]: mLSTM blocks with sLSTM every 6th.
+Recurrent state (no KV cache) -> serves long_500k natively."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-350m", family="ssm",
+    n_layers=24, d_model=1024, n_heads=4, n_kv_heads=4, d_ff=0,
+    vocab_size=50304,
+    slstm_every=6, xlstm_proj_factor=2.0, subquadratic=True,
+)

@@ -1,0 +1,12 @@
+"""Zamba2-7B [arXiv:2411.15242]: Mamba2 backbone + ONE shared attention
+block applied every 6 layers (weight sharing is zamba's signature).
+SSM-dominant -> serves long_500k."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b", family="hybrid",
+    n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32, d_ff=14336,
+    vocab_size=32000, head_dim=112,
+    ssm_state=64, ssm_expand=2, ssm_head_dim=64, attn_every=6,
+    subquadratic=True,
+)

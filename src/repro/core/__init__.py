@@ -1,0 +1,39 @@
+"""HCiM core: PSQ quantization-aware training + crossbar execution model.
+
+The paper's primary contribution (ADC-less partial-sum quantization with
+learned, fixed-point scale factors processed by a digital CiM array) is
+implemented here as a composable quantized-matmul that every layer of the
+model zoo routes through.
+"""
+from repro.core.config import (
+    DENSE,
+    PSQ_BINARY,
+    PSQ_TERNARY,
+    QuantConfig,
+    adc_baseline,
+)
+from repro.core.psq import (
+    init_psq_params,
+    num_tiles,
+    psq_matmul,
+    psq_matmul_dequant_reference,
+)
+from repro.core.psq_linear import apply_linear, init_linear
+from repro.core.quant import CIFAR_SPEC, IMAGENET_SPEC, QuantSpec
+
+__all__ = [
+    "DENSE",
+    "PSQ_BINARY",
+    "PSQ_TERNARY",
+    "QuantConfig",
+    "QuantSpec",
+    "CIFAR_SPEC",
+    "IMAGENET_SPEC",
+    "adc_baseline",
+    "apply_linear",
+    "init_linear",
+    "init_psq_params",
+    "num_tiles",
+    "psq_matmul",
+    "psq_matmul_dequant_reference",
+]

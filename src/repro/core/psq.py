@@ -1,0 +1,282 @@
+"""Partial-Sum Quantization crossbar matmul — the HCiM datapath (paper §4).
+
+The analog crossbar / comparator / DCiM pipeline is modeled *bit-exactly*:
+
+  1. activations and weights are LSQ-quantized to ``n_a`` / ``n_w`` bit
+     integers (two's complement),
+  2. the K (reduction) dimension is blocked into crossbar tiles of
+     ``R = xbar_rows`` rows; each (input-bit-stream j, weight-bit-slice k,
+     tile t) produces an analog column partial sum
+     ``ps[j,k,t,o] = sum_{i in t} x_bit[j,i] * w_bit[k,i,o]  in [0, R]``,
+  3. the column is read differentially (bipolar weight cells), giving the
+     signed comparator input ``a = 2*ps - rowsum[j,t]  in [-R, R]``,
+  4. a 1- or 1.5-bit comparator produces ``p in {-1,0,1}`` (Eq. 1),
+  5. the DCiM array accumulates ``PS += p * s_q * sigma_j`` where ``s_q``
+     is the learned, fixed-point-quantized scale factor and ``sigma_j``
+     the stream significance (the 2^j shift of Fig. 2(a)),
+  6. bit-slices and tiles are combined digitally by shift-add, and a
+     single digital correction ``0.5 * c_w * sum_i x_int`` recovers the
+     unipolar-to-bipolar offset (``c_w = sum_k kappa_k = -1`` for two's
+     complement) — one scalar per input row, folded into the DCiM
+     accumulation in hardware.
+
+Gradients (QAT, §4.1): the forward value is the exact HCiM arithmetic;
+gradients w.r.t. activations/weights flow through a tile-level surrogate
+(the unquantized integer matmul — BNN-style full pass-through STE), while
+scale factors, the ternary threshold ``alpha`` and the per-layer
+scale-factor step get their LSQ gradients through an explicit path whose
+forward value coincides with the exact one.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.config import QuantConfig
+
+sg = jax.lax.stop_gradient
+
+
+def num_tiles(k_in: int, xbar_rows: int) -> int:
+    return math.ceil(k_in / xbar_rows)
+
+
+def pad_to_tiles(x: jax.Array, axis: int, xbar_rows: int) -> jax.Array:
+    k = x.shape[axis]
+    t = num_tiles(k, xbar_rows)
+    pad = t * xbar_rows - k
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# Exact bit-plane partial sums
+# ---------------------------------------------------------------------------
+
+def tile_partial_sums(
+    xb_j: jax.Array,  # (B, T*R) bits of one input stream
+    wb_k: jax.Array,  # (T*R, O) bits of one weight slice
+    xbar_rows: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-tile crossbar column outputs for one (stream, slice) pair.
+
+    Returns ``ps`` of shape (B, T, O) — the unipolar analog column sums —
+    and ``rowsum`` of shape (B, T) — the per-tile count of active input
+    bits (the reference column used for differential sensing).
+
+    Bit values are {0,1} and tiles have at most 128 rows, so float32 (and
+    MXU bf16-with-f32-accum) arithmetic is exact.
+    """
+    b, kr = xb_j.shape
+    t = kr // xbar_rows
+    o = wb_k.shape[1]
+    xt = xb_j.reshape(b, t, xbar_rows)
+    wt = wb_k.reshape(t, xbar_rows, o)
+    ps = jnp.einsum("btr,tro->bto", xt, wt, precision=jax.lax.Precision.HIGHEST)
+    rowsum = jnp.sum(xt, axis=-1)  # (B, T)
+    return ps, rowsum
+
+
+# ---------------------------------------------------------------------------
+# The full PSQ matmul
+# ---------------------------------------------------------------------------
+
+def psq_matmul(
+    x: jax.Array,            # (..., K) activations
+    w: jax.Array,            # (K, O) weight master copy
+    params: Dict[str, jax.Array],
+    cfg: QuantConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """HCiM quantized matmul. Returns (y, stats).
+
+    ``params`` holds the learned quantization state:
+      step_x : ()            LSQ activation step
+      step_w : () or (O,)    LSQ weight step
+      sf     : cfg.sf_shape  scale factors (non-negative)
+      sf_step: ()            per-layer scale-factor fixed-point step (S_L)
+      alpha  : ()            ternary threshold (binary: STE window)
+    """
+    spec = cfg.spec
+    orig_shape = x.shape
+    k_in = x.shape[-1]
+    o = w.shape[-1]
+    xf = x.reshape(-1, k_in)
+    bsz = xf.shape[0]
+    r = cfg.xbar_rows
+    t = num_tiles(k_in, r)
+
+    # --- LSQ integer codes (STE gradients attached) ---
+    x_int, s_x = quant.lsq_quantize_int(xf, params["step_x"], spec.a_qn, spec.a_qp)
+    g_w = quant.lsq_grad_factor(w.size, spec.w_qp)
+    w_int, s_w = quant.lsq_quantize_int(w, params["step_w"], spec.w_qn, spec.w_qp, g=g_w)
+
+    # --- surrogate: tile-level integer matmul, carries the x/w gradients ---
+    y_sur = jnp.einsum(
+        "bk,ko->bo", x_int, w_int, precision=jax.lax.Precision.HIGHEST
+    )
+
+    # --- exact bit-plane pipeline (values only) ---
+    x_pad = pad_to_tiles(sg(x_int), 1, r)
+    w_pad = pad_to_tiles(sg(w_int), 0, r)
+    xbits = quant.twos_complement_bits(x_pad, spec.n_bits_a)   # (n_a, B, T*R)
+    wbits = quant.twos_complement_bits(w_pad, spec.n_bits_w)   # (n_w, T*R, O)
+    sigma = quant.bit_weights(spec.n_bits_a)                   # stream weights
+    kappa = quant.bit_weights(spec.n_bits_w)                   # slice weights
+    c_w = jnp.sum(kappa)                                       # = -1 (2's comp)
+
+    sf_q = None
+    if cfg.mode == "psq":
+        sf_q_int, sl = quant.quantize_scale_factors_int(
+            params["sf"], params["sf_step"], spec.n_bits_sf
+        )
+        sf_q = sf_q_int * sl  # dequantized fixed-point scale factors
+
+    y_q = jnp.zeros((bsz, o), dtype=jnp.float32)
+    zeros = jnp.array(0.0)
+    total = jnp.array(0.0)
+    ps_max = jnp.array(0.0)
+    for j in range(spec.n_bits_a):
+        ps_j, rowsum_j = tile_partial_sums(xbits[j], wbits[0], r)
+        for k in range(spec.n_bits_w):
+            if k > 0:
+                ps_j, _ = tile_partial_sums(xbits[j], wbits[k], r)
+            if cfg.mode == "adc":
+                ps_q = quant.adc_quantize(sg(ps_j), cfg.adc_bits, r)
+                y_q = y_q + kappa[k] * sigma[j] * jnp.sum(ps_q, axis=1)
+            else:
+                # differential (bipolar) comparator input, in [-R, R]
+                a = 2.0 * ps_j - rowsum_j[:, :, None]          # (B, T, O)
+                if cfg.psq_levels == "ternary":
+                    p = quant.ternary_comparator(sg(a), params["alpha"])
+                else:
+                    # binary has no threshold in Eq. 1: freeze alpha so the
+                    # (forward-irrelevant) STE window cannot drift it.
+                    p = quant.binary_comparator(sg(a), sg(params["alpha"]))
+                # DCiM accumulate: PS += sigma_j * p * s_q  (per column)
+                sf_jk = jnp.broadcast_to(
+                    sf_q[:, min(j, sf_q.shape[1] - 1), min(k, sf_q.shape[2] - 1)],
+                    (t, o) if sf_q.shape[-1] == o else (t, 1),
+                )
+                contrib = p * sf_jk[None, :, :]
+                y_q = y_q + 0.5 * kappa[k] * sigma[j] * jnp.sum(contrib, axis=1)
+                if cfg.collect_stats:
+                    zeros = zeros + jnp.sum(sg(p) == 0.0)
+                    total = total + p.size
+                    ps_max = jnp.maximum(ps_max, jnp.max(jnp.abs(sg(a))))
+
+    if cfg.mode == "psq":
+        # digital offset correction: 0.5 * c_w * sum_i x_int (per row)
+        corr = 0.5 * c_w * jnp.sum(sg(x_int), axis=-1, keepdims=True)
+        y_q = y_q + corr
+
+    # exact forward + surrogate gradient assembly
+    y_int = y_q + (y_sur - sg(y_sur))
+
+    y = y_int * s_x * jnp.reshape(s_w, (1, -1) if jnp.ndim(s_w) else ())
+    stats: Dict[str, jax.Array] = {}
+    if cfg.collect_stats and cfg.mode == "psq":
+        stats["p_zero_frac"] = zeros / jnp.maximum(total, 1.0)
+        stats["comparator_in_max"] = ps_max
+    return y.reshape(orig_shape[:-1] + (o,)), stats
+
+
+def psq_matmul_dequant_reference(
+    x: jax.Array, w: jax.Array, params: Dict[str, jax.Array], cfg: QuantConfig
+) -> jax.Array:
+    """Slow, fully materialized oracle used by unit tests.
+
+    Computes the same function as :func:`psq_matmul` by materializing the
+    full (n_a, n_w, B, T, O) partial-sum tensor — no loops, no surrogate
+    tricks, values only (stop-gradient everywhere).
+    """
+    spec = cfg.spec
+    k_in = x.shape[-1]
+    o = w.shape[-1]
+    xf = x.reshape(-1, k_in)
+    r = cfg.xbar_rows
+    t = num_tiles(k_in, r)
+
+    x_int, s_x = quant.lsq_quantize_int(xf, params["step_x"], spec.a_qn, spec.a_qp)
+    w_int, s_w = quant.lsq_quantize_int(
+        w, params["step_w"], spec.w_qn, spec.w_qp,
+        g=quant.lsq_grad_factor(w.size, spec.w_qp),
+    )
+    x_int, w_int, s_x, s_w = sg(x_int), sg(w_int), sg(s_x), sg(s_w)
+
+    x_pad = pad_to_tiles(x_int, 1, r).reshape(-1, t, r)
+    w_pad = pad_to_tiles(w_int, 0, r).reshape(t, r, o)
+    xbits = quant.twos_complement_bits(x_pad, spec.n_bits_a)   # (n_a,B,T,R)
+    wbits = quant.twos_complement_bits(w_pad, spec.n_bits_w)   # (n_w,T,R,O)
+    ps = jnp.einsum("jbtr,ktro->jkbto", xbits, wbits)          # exact ints
+    sigma = quant.bit_weights(spec.n_bits_a)
+    kappa = quant.bit_weights(spec.n_bits_w)
+
+    if cfg.mode == "adc":
+        ps_q = quant.adc_quantize(ps, cfg.adc_bits, r)
+        y_int = jnp.einsum("j,k,jkbto->bo", sigma, kappa, ps_q)
+    else:
+        rowsum = jnp.sum(xbits, axis=-1)                       # (n_a,B,T)
+        a = 2.0 * ps - rowsum[:, None, :, :, None]
+        if cfg.psq_levels == "ternary":
+            alpha = jnp.maximum(params["alpha"], 1e-6)
+            p = jnp.where(a >= alpha, 1.0, jnp.where(a <= -alpha, -1.0, 0.0))
+        else:
+            p = jnp.where(a >= 0.0, 1.0, -1.0)
+        sf_q_int, sl = quant.quantize_scale_factors_int(
+            params["sf"], params["sf_step"], spec.n_bits_sf
+        )
+        sf_q = sg(sf_q_int * sl)
+        # reduced granularities broadcast up to the full (T, n_a, n_w, O)
+        sf_full = jnp.broadcast_to(sf_q, (t, spec.n_bits_a, spec.n_bits_w, o))
+        y_int = 0.5 * jnp.einsum("j,k,jkbto,tjko->bo", sigma, kappa, p, sf_full)
+        c_w = jnp.sum(kappa)
+        y_int = y_int + 0.5 * c_w * jnp.sum(x_int, axis=-1, keepdims=True)
+
+    y = y_int * s_x * jnp.reshape(s_w, (1, -1) if jnp.ndim(s_w) else ())
+    return y.reshape(x.shape[:-1] + (o,))
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def init_psq_params(
+    key: jax.Array,
+    k_in: int,
+    n_out: int,
+    cfg: QuantConfig,
+    w_std: Optional[float] = None,
+) -> Dict[str, jax.Array]:
+    """Initialize quantizer state for one PSQ linear layer.
+
+    LSQ-style analytic init: for bit vectors with ~half the bits set, the
+    differential column output ``a`` has std ≈ sqrt(R/2); the ternary
+    threshold starts at 0.67·std (≈50 % zeros, matching Fig. 2(c)) and
+    scale factors at E[|a| : |a|>alpha] ≈ sqrt(R).
+    """
+    spec = cfg.spec
+    w_std = w_std if w_std is not None else 1.0 / math.sqrt(k_in)
+    r = float(cfg.xbar_rows)
+    t = num_tiles(k_in, cfg.xbar_rows)
+    std_a = math.sqrt(r / 2.0)
+    sf_init = math.sqrt(r)
+    params = {
+        # 2*std/sqrt(qp) LSQ init, assuming unit-ish activation std.
+        "step_x": jnp.asarray(2.0 / math.sqrt(spec.a_qp), jnp.float32),
+        "step_w": jnp.asarray(2.0 * w_std / math.sqrt(spec.w_qp), jnp.float32),
+        "alpha": jnp.asarray(0.67 * std_a, jnp.float32),
+    }
+    if cfg.mode == "psq":
+        shape = cfg.sf_shape(t, n_out)
+        params["sf"] = jnp.full(shape, sf_init, jnp.float32)
+        params["sf_step"] = jnp.asarray(
+            sf_init / (2 ** (spec.n_bits_sf - 1)), jnp.float32
+        )
+    return params

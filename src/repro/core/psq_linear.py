@@ -1,0 +1,113 @@
+"""PSQLinear — a linear layer whose execution mode is the paper's knob.
+
+Every projection in the model zoo routes through this module so the HCiM
+technique (mode="psq"), the ADC baselines (mode="adc") and the fp path
+(mode="none") are selectable per experiment from the config system.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import psq
+from repro.core.config import QuantConfig
+
+Params = Dict[str, jax.Array]
+
+
+def init_linear(
+    key: jax.Array,
+    k_in: int,
+    n_out: int,
+    cfg: QuantConfig,
+    use_bias: bool = False,
+    w_init_std: Optional[float] = None,
+    dtype=jnp.float32,
+) -> Params:
+    """Create parameters for one (possibly quantized) linear layer."""
+    wkey, _ = jax.random.split(key)
+    std = w_init_std if w_init_std is not None else 1.0 / math.sqrt(k_in)
+    p: Params = {"w": (jax.random.normal(wkey, (k_in, n_out)) * std).astype(dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((n_out,), dtype)
+    if cfg.quantized:
+        p.update(psq.init_psq_params(key, k_in, n_out, cfg, w_std=std))
+        if cfg.per_channel_w:
+            p["step_w"] = jnp.full((n_out,), float(p["step_w"]), jnp.float32)
+    return p
+
+
+def pack_weight_int4(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-out-channel int4 packing: (..., K, O) -> int8 (..., K/2, O).
+
+    Deployment format for PSQ-trained weights (4-bit is the paper's CIFAR
+    recipe): two two's-complement nibbles per byte along K, so the decode
+    step streams 4x fewer weight bytes from HBM than bf16.
+    """
+    scale = jnp.max(jnp.abs(w), axis=-2, keepdims=True) / 7.0
+    wi = jnp.clip(jnp.round(w / jnp.maximum(scale, 1e-9)), -8, 7)
+    u = jnp.mod(wi.astype(jnp.int32), 16)
+    lo, hi = u[..., 0::2, :], u[..., 1::2, :]
+    return (lo | (hi << 4)).astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def _unpack_int4_matmul(x: jax.Array, packed: jax.Array, scale: jax.Array):
+    w8 = packed.astype(jnp.int32)
+    lo = w8 & 0xF
+    hi = (w8 >> 4) & 0xF
+    lo = lo - 16 * (lo >= 8).astype(jnp.int32)
+    hi = hi - 16 * (hi >= 8).astype(jnp.int32)
+    w_int = jnp.stack([lo, hi], axis=-2)
+    w_int = w_int.reshape(*packed.shape[:-2], 2 * packed.shape[-2],
+                          packed.shape[-1])
+    w = w_int.astype(x.dtype) * scale.astype(x.dtype)
+    return x @ w
+
+
+def pack_tree_for_serving(node):
+    """Replace every linear master weight in a param tree by its int4
+    packed + per-channel-scale pair (embeddings/norms untouched)."""
+    if isinstance(node, dict):
+        out = {}
+        for k, v in node.items():
+            if (
+                k == "w" and hasattr(v, "ndim") and v.ndim >= 2
+                and v.shape[-2] % 2 == 0
+            ):
+                out["w_packed"], out["w_scale"] = pack_weight_int4(v)
+            else:
+                out[k] = pack_tree_for_serving(v)
+        return out
+    if isinstance(node, (list, tuple)):
+        return type(node)(pack_tree_for_serving(v) for v in node)
+    return node
+
+
+def apply_linear(
+    params: Params,
+    x: jax.Array,
+    cfg: QuantConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """y = quantized_matmul(x, w) + b. Returns (y, stats)."""
+    if "w_packed" in params:  # int4 weight-stationary serving path
+        y = _unpack_int4_matmul(x, params["w_packed"], params["w_scale"])
+        stats: Dict[str, jax.Array] = {}
+    elif not cfg.quantized:
+        y = x @ params["w"].astype(x.dtype)
+        stats = {}
+    elif cfg.use_kernel:
+        from repro.kernels import ops as kernel_ops
+
+        y, stats = kernel_ops.psq_matmul(x, params["w"], params, cfg)
+    else:
+        y, stats = psq.psq_matmul(x, params["w"], params, cfg)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y, stats
+
+
+def linear_flops(k_in: int, n_out: int, tokens: int) -> int:
+    return 2 * k_in * n_out * tokens

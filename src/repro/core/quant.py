@@ -1,0 +1,276 @@
+"""Quantization primitives for PSQ-QAT (paper §4.1).
+
+Implements LSQ (Esser et al. [14]) learned-step quantizers with
+straight-through estimators, two's-complement bit slicing/streaming, and
+the fixed-point scale-factor quantizer introduced by HCiM.
+
+Conventions
+-----------
+* ``round_ste``      — round-to-nearest-even (LSQ standard) with STE.
+* ``round_comparator`` — ties away from zero, matching comparator
+  semantics of Eq. (1) (``p = 1`` iff ``a >= alpha``, ``p = -1`` iff
+  ``a <= -alpha``).
+* All integer-valued tensors are carried in float32: every quantity in
+  the HCiM datapath is bounded by ``xbar_rows <= 128`` and therefore
+  exactly representable (f32 is exact on integers < 2**24, bf16 up to
+  256 — both safe for bit-plane partial sums).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+sg = jax.lax.stop_gradient
+
+
+# ---------------------------------------------------------------------------
+# Straight-through helpers
+# ---------------------------------------------------------------------------
+
+def grad_scale(x: jax.Array, scale) -> jax.Array:
+    """Identity in the forward pass; multiplies the gradient by ``scale``.
+
+    LSQ scales the step-size gradient by ``1/sqrt(numel * qp)`` to balance
+    its magnitude against weight gradients (Esser et al., §3.1).
+    """
+    return x * scale + sg(x - x * scale)
+
+
+def round_ste(x: jax.Array) -> jax.Array:
+    """Round-to-nearest-even with a straight-through gradient."""
+    return x + sg(jnp.round(x) - x)
+
+
+def round_comparator(x: jax.Array) -> jax.Array:
+    """Round half away from zero (comparator convention, no STE).
+
+    Used for comparator thresholds so the boundary cases of Eq. (1)
+    (``a == ±alpha``) land on ``p = ±1`` exactly as the hardware does.
+    """
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+
+
+def round_comparator_ste(x: jax.Array) -> jax.Array:
+    return x + sg(round_comparator(x) - x)
+
+
+def clip_ste_passthrough(x: jax.Array, lo, hi) -> jax.Array:
+    """Clip with full gradient pass-through (BNN-style hard clipping)."""
+    return x + sg(jnp.clip(x, lo, hi) - x)
+
+
+# ---------------------------------------------------------------------------
+# LSQ quantizer
+# ---------------------------------------------------------------------------
+
+def lsq_grad_factor(numel: int, qp: int) -> float:
+    return 1.0 / float(jnp.sqrt(jnp.maximum(numel * qp, 1)).item()) if False else float(
+        1.0 / (max(numel * qp, 1) ** 0.5)
+    )
+
+
+def lsq_quantize(
+    x: jax.Array,
+    step: jax.Array,
+    qn: int,
+    qp: int,
+    g: Optional[float] = None,
+) -> jax.Array:
+    """Fake-quantize ``x`` with learned step ``step`` to integers [qn, qp].
+
+    Returns the dequantized value ``round(clip(x/s, qn, qp)) * s`` with
+    LSQ gradients for both ``x`` (clipped STE) and ``step``.
+    ``step`` may be scalar or broadcastable (per-channel).
+    """
+    if g is None:
+        g = lsq_grad_factor(x.size, max(qp, 1))
+    s = grad_scale(jnp.maximum(step, 1e-9), g)
+    v = x / s
+    v = jnp.clip(v, qn, qp)  # clip gradient: zero outside range (LSQ)
+    return round_ste(v) * s
+
+
+def lsq_quantize_int(
+    x: jax.Array,
+    step: jax.Array,
+    qn: int,
+    qp: int,
+    g: Optional[float] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Like :func:`lsq_quantize` but returns ``(int_codes, step)``.
+
+    ``int_codes`` carries STE gradients w.r.t. ``x`` and (via the
+    division) ``step``; its forward value is an exact integer in
+    ``[qn, qp]`` stored as f32.
+    """
+    if g is None:
+        g = lsq_grad_factor(x.size, max(qp, 1))
+    s = grad_scale(jnp.maximum(step, 1e-9), g)
+    v = jnp.clip(x / s, qn, qp)
+    return round_ste(v), s
+
+
+# ---------------------------------------------------------------------------
+# Two's-complement bit slicing / streaming
+# ---------------------------------------------------------------------------
+
+def twos_complement_bits(x_int: jax.Array, n_bits: int) -> jax.Array:
+    """Decompose signed integers into two's-complement bit planes.
+
+    Parameters
+    ----------
+    x_int : integer-valued f32 array, values in ``[-2**(n-1), 2**(n-1)-1]``.
+    n_bits : total bits ``n``.
+
+    Returns
+    -------
+    bits : ``(n_bits,) + x.shape`` array of {0.,1.}, where
+        ``sum_k weight(k) * bits[k] == x_int`` with
+        ``weight(k) = 2**k`` for ``k < n-1`` and ``-2**(n-1)`` for the MSB.
+
+    The forward value is exact; no gradient flows through (callers use the
+    surrogate-STE assembly in :mod:`repro.core.psq` for gradients).
+    """
+    x_int = sg(x_int)
+    u = jnp.mod(x_int, 2.0 ** n_bits)  # wrap negatives: two's complement
+    planes = []
+    for k in range(n_bits):
+        planes.append(jnp.mod(jnp.floor(u / (2.0 ** k)), 2.0))
+    return jnp.stack(planes, axis=0)
+
+
+def bit_weights(n_bits: int, signed: bool = True) -> jnp.ndarray:
+    """Significance of each two's-complement bit plane."""
+    w = [2.0 ** k for k in range(n_bits)]
+    if signed:
+        w[-1] = -(2.0 ** (n_bits - 1))
+    return jnp.asarray(w, dtype=jnp.float32)
+
+
+def unsigned_bits(x_int: jax.Array, n_bits: int) -> jax.Array:
+    """Bit planes of unsigned integers (e.g. unsigned activations)."""
+    x_int = sg(x_int)
+    planes = []
+    for k in range(n_bits):
+        planes.append(jnp.mod(jnp.floor(x_int / (2.0 ** k)), 2.0))
+    return jnp.stack(planes, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# HCiM scale-factor quantizer (paper §4.1)
+# ---------------------------------------------------------------------------
+
+def quantize_scale_factors(
+    sf: jax.Array,
+    layer_step: jax.Array,
+    n_bits: int,
+    g: Optional[float] = None,
+) -> jax.Array:
+    """Quantize the (non-negative) scale-factor tensor to fixed point.
+
+    HCiM's contribution over [25]: scale factors become ``n_bits``-bit
+    unsigned fixed-point numbers sharing a single per-layer step
+    ``layer_step`` (itself learned, LSQ-style), so the DCiM array only
+    ever adds/subtracts small integers; the per-layer step merges into
+    the following normalization layer at deployment.
+    """
+    qp = 2 ** n_bits - 1
+    if g is None:
+        g = lsq_grad_factor(sf.size, qp)
+    s = grad_scale(jnp.maximum(layer_step, 1e-9), g)
+    v = jnp.clip(sf / s, 0.0, float(qp))
+    return round_ste(v) * s
+
+
+def quantize_scale_factors_int(
+    sf: jax.Array, layer_step: jax.Array, n_bits: int, g: Optional[float] = None
+) -> Tuple[jax.Array, jax.Array]:
+    qp = 2 ** n_bits - 1
+    if g is None:
+        g = lsq_grad_factor(sf.size, qp)
+    s = grad_scale(jnp.maximum(layer_step, 1e-9), g)
+    v = jnp.clip(sf / s, 0.0, float(qp))
+    return round_ste(v), s
+
+
+# ---------------------------------------------------------------------------
+# Comparator quantizers (Eq. 1)
+# ---------------------------------------------------------------------------
+
+def ternary_comparator(a: jax.Array, alpha: jax.Array) -> jax.Array:
+    """Exact ternary comparator of Eq. (1): two latch comparators at ±alpha.
+
+    Differentiable in ``alpha`` (LSQ quotient + round-STE); callers pass a
+    stop-gradient ``a`` when the activation gradient is routed through the
+    tile-level surrogate instead (see :mod:`repro.core.psq`).
+    """
+    alpha = jnp.maximum(alpha, 1e-6)
+    v = a / (2.0 * alpha)
+    v = clip_ste_passthrough(v, -1.0, 1.0)
+    return round_comparator_ste(v)
+
+
+def binary_comparator(a: jax.Array, window: jax.Array) -> jax.Array:
+    """Binary comparator: ``p = +1`` iff ``a >= 0`` else ``-1``.
+
+    ``window`` only shapes the (unused-by-default) STE pass-through; the
+    forward value is the exact sign with sign(0) = +1 per Eq. (1).
+    """
+    window = jnp.maximum(window, 1e-6)
+    v = clip_ste_passthrough(a / window, -1.0, 1.0)
+    p = jnp.where(sg(a) >= 0.0, 1.0, -1.0)
+    return v + sg(p - v)
+
+
+def adc_quantize(ps: jax.Array, adc_bits: int, xbar_rows: int) -> jax.Array:
+    """b-bit ADC on a unipolar partial sum ``ps ∈ [0, xbar_rows]``.
+
+    Models the paper's baseline: uniform ``2**b`` codes across the full
+    crossbar range, ties-away rounding (flash/SAR comparator ladders),
+    values above the top code clip (the usual one-LSB convention by which
+    a 128-row crossbar "ideally requires 7-bit ADCs").
+    """
+    # An ADC with 2**b codes over [0, R]; once the LSB reaches one unit of
+    # partial sum the converter is effectively lossless (the paper's "a
+    # 128-row crossbar ideally requires 7-bit ADCs" convention).
+    step = max(1.0, xbar_rows / float(2 ** adc_bits))
+    code = round_comparator_ste(ps / step)
+    code = clip_ste_passthrough(code, 0.0, float(2 ** adc_bits - 1))
+    return code * step
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Bit-widths of one PSQ deployment (paper §5.1).
+
+    CIFAR recipe:    a4 / w4 / sf4  partial sums accumulated in 8b.
+    ImageNet recipe: a3 / w3 / sf8  partial sums accumulated in 16b.
+    """
+
+    n_bits_a: int = 4
+    n_bits_w: int = 4
+    n_bits_sf: int = 4
+    ps_accum_bits: int = 8
+
+    @property
+    def a_qn(self) -> int:
+        return -(2 ** (self.n_bits_a - 1))
+
+    @property
+    def a_qp(self) -> int:
+        return 2 ** (self.n_bits_a - 1) - 1
+
+    @property
+    def w_qn(self) -> int:
+        return -(2 ** (self.n_bits_w - 1))
+
+    @property
+    def w_qp(self) -> int:
+        return 2 ** (self.n_bits_w - 1) - 1
+
+
+CIFAR_SPEC = QuantSpec(n_bits_a=4, n_bits_w=4, n_bits_sf=4, ps_accum_bits=8)
+IMAGENET_SPEC = QuantSpec(n_bits_a=3, n_bits_w=3, n_bits_sf=8, ps_accum_bits=16)

@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipelines (seekable, host-sharded)."""
+from repro.data.pipeline import (
+    ClassificationConfig, ClassificationStream, DataConfig, TokenStream,
+)

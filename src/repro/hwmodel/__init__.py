@@ -1,0 +1,13 @@
+"""Energy/latency/area model of HCiM vs ADC-based analog CiM (paper §5)."""
+from repro.hwmodel.devices import (
+    ADCS, ADC_FLASH_4B, ADC_SAR_6B, ADC_SAR_7B, DCIM_A, DCIM_B,
+    DEFAULT_HW, HwParams, scale_peripheral,
+)
+from repro.hwmodel.dcim import (
+    CONFIG_A, CONFIG_B, DCiMConfig, cim_add_sub_row,
+    dcim_column_energy_pj, dcim_latency_ns, dcim_latency_per_column_ns,
+)
+from repro.hwmodel.system import (
+    LayerShape, SystemConfig, Tally, evaluate_layer, evaluate_workload,
+)
+from repro.hwmodel.workloads import WORKLOADS

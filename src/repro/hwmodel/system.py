@@ -1,0 +1,214 @@
+"""PUMA-style system-level energy/latency/area accounting (paper §5).
+
+Counts crossbar, peripheral and data-movement events for a workload's
+layer shapes, exactly the way the paper's cycle-accurate comparison is
+set up: weight-stationary crossbars (weights and scale factors pre-loaded
+and reused), one ADC *or* one DCiM array per analog crossbar, inputs
+bit-streamed, batch-1 inference.
+
+Three system styles are modeled:
+  * ``adc``    — analog CiM baseline with a b-bit ADC + shift-and-add.
+  * ``quarry`` — PSQ-trained net, 1/1.5-bit comparator readout, but scale
+                 factors fetched from SRAM and applied in digital
+                 multipliers (Quarry [6]-style; the strawman motivating
+                 Fig. 2(c)).
+  * ``hcim``   — this paper: comparator readout + in-memory DCiM
+                 scale-factor add/sub with ternary sparsity gating.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+from repro.hwmodel import dcim as dcim_mod
+from repro.hwmodel.devices import (
+    ADCS,
+    ColumnPeripheral,
+    DEFAULT_HW,
+    HwParams,
+    scale_peripheral,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerShape:
+    """One MVM layer: y[o] += sum_k x[k] w[k,o], evaluated n_vec times."""
+
+    name: str
+    k: int        # reduction dim (im2col: kh*kw*cin)
+    o: int        # output channels
+    n_vec: int    # input vectors per inference (conv: H_out*W_out)
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemConfig:
+    style: str                    # adc | quarry | hcim
+    xbar_rows: int = 128          # crossbar geometry (square, config A/B)
+    n_bits_a: int = 4
+    n_bits_w: int = 4
+    n_bits_sf: int = 4
+    adc_bits: int = 7             # for style == "adc"
+    levels: str = "ternary"       # hcim/quarry readout: ternary | binary
+    sparsity: float = 0.5         # mean ternary p==0 fraction (Fig. 2(c))
+    tech_scale: bool = False      # scale 65 nm components to 32 nm [26]
+
+
+@dataclasses.dataclass
+class Tally:
+    energy_pj: float = 0.0
+    latency_ns: float = 0.0
+    area_mm2: float = 0.0
+    breakdown: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, key: str, pj: float):
+        self.energy_pj += pj
+        self.breakdown[key] = self.breakdown.get(key, 0.0) + pj
+
+    @property
+    def edap(self) -> float:
+        return self.energy_pj * self.latency_ns * self.area_mm2
+
+    @property
+    def latency_area(self) -> float:
+        return self.latency_ns * self.area_mm2
+
+
+def _peripheral(cfg: SystemConfig) -> ColumnPeripheral:
+    if cfg.style == "adc":
+        p = ADCS[cfg.adc_bits]
+    else:
+        geo = dcim_mod.DCiMConfig(
+            columns=cfg.xbar_rows,
+            n_streams=cfg.n_bits_a,
+            sf_bits=cfg.n_bits_sf,
+        )
+        p = dcim_mod.peripheral_for(geo)
+    return scale_peripheral(p) if cfg.tech_scale else p
+
+
+def _scaled_hw(hw: HwParams) -> HwParams:
+    """Apply the 65->32 nm scaling [26] to every digital/analog constant,
+    exactly as the paper does before plugging components into PUMA."""
+    from repro.hwmodel.devices import SCALE_65_TO_32 as F
+
+    return dataclasses.replace(
+        hw,
+        xbar_mac_energy_pj=hw.xbar_mac_energy_pj * F["energy"],
+        driver_energy_pj_per_row=hw.driver_energy_pj_per_row * F["energy"],
+        sna_energy_pj=hw.sna_energy_pj * F["energy"],
+        comparator_energy_pj=hw.comparator_energy_pj * F["energy"],
+        sram_access_pj_per_byte=hw.sram_access_pj_per_byte * F["energy"],
+        mult_energy_pj=hw.mult_energy_pj * F["energy"],
+        ps_move_energy_pj=hw.ps_move_energy_pj * F["energy"],
+        xbar_read_latency_ns=hw.xbar_read_latency_ns * F["latency"],
+        dcim_clock_ghz=hw.dcim_clock_ghz / F["latency"],
+        xbar_area_mm2=hw.xbar_area_mm2 * F["area"],
+        sna_area_mm2=hw.sna_area_mm2 * F["area"],
+        comparator_area_mm2=hw.comparator_area_mm2 * F["area"],
+    )
+
+
+def evaluate_layer(
+    layer: LayerShape, cfg: SystemConfig, hw: HwParams = DEFAULT_HW,
+    sparsity: Optional[float] = None,
+) -> Tally:
+    """Energy/latency/area of one layer for one inference."""
+    if cfg.tech_scale:
+        hw = _scaled_hw(hw)
+    r = cfg.xbar_rows
+    n_streams = cfg.n_bits_a
+    tiles_k = math.ceil(layer.k / r)
+    cols = layer.o * cfg.n_bits_w                 # bit-slice = 1
+    tiles_c = math.ceil(cols / r)
+    n_xbars = tiles_k * tiles_c
+    col_events = tiles_k * cols * n_streams       # per input vector
+    sp = cfg.sparsity if sparsity is None else sparsity
+
+    t = Tally()
+
+    # --- analog MVM (identical across styles) ---
+    macs = layer.k * cols * n_streams
+    t.add("xbar_mvm", layer.n_vec * macs * hw.xbar_mac_energy_pj)
+    t.add(
+        "drivers",
+        layer.n_vec * layer.k * n_streams * tiles_c * hw.driver_energy_pj_per_row,
+    )
+
+    # --- column processing ---
+    per = _peripheral(cfg)
+    if cfg.style == "adc":
+        t.add("adc", layer.n_vec * col_events * per.energy_pj)
+        t.add("shift_add", layer.n_vec * col_events * hw.sna_energy_pj)
+    else:
+        n_comp = 2 if cfg.levels == "ternary" else 1
+        t.add(
+            "comparators",
+            layer.n_vec * col_events * n_comp * hw.comparator_energy_pj,
+        )
+        eff_sp = sp if cfg.levels == "ternary" else 0.0
+        if cfg.style == "hcim":
+            # ``per`` is already tech-scaled by _peripheral when requested
+            e_col = dcim_mod.dcim_column_energy_pj(eff_sp, per, hw)
+            t.add("dcim", layer.n_vec * col_events * e_col)
+        else:  # quarry-style digital scale-factor processing
+            active = 1.0 - eff_sp
+            t.add(
+                "sf_mult",
+                layer.n_vec * col_events * active * hw.mult_energy_pj,
+            )
+            sf_bytes = cfg.n_bits_sf / 8.0
+            t.add(
+                "sf_sram_fetch",
+                layer.n_vec * col_events * active * sf_bytes
+                * hw.sram_access_pj_per_byte,
+            )
+
+    # --- cross-tile partial-sum movement + accumulation ---
+    if tiles_k > 1:
+        words = (tiles_k - 1) * layer.o
+        t.add("ps_movement", layer.n_vec * words * hw.ps_move_energy_pj)
+
+    # --- latency (per vector, streams sequential; crossbars parallel;
+    #     one peripheral per crossbar serializes its columns) ---
+    cols_per_xbar = min(cols, r)
+    if cfg.style == "adc":
+        col_lat = cols_per_xbar * n_streams * per.latency_ns
+    else:
+        geo = dcim_mod.DCiMConfig(
+            columns=cfg.xbar_rows, n_streams=n_streams, sf_bits=cfg.n_bits_sf
+        )
+        # dcim clock already scaled inside hw when tech_scale
+        col_lat = dcim_mod.dcim_latency_ns(geo, hw) * (
+            cols_per_xbar / geo.columns
+        )
+    xbar_lat = n_streams * hw.xbar_read_latency_ns
+    t.latency_ns = layer.n_vec * (xbar_lat + col_lat)
+
+    # --- area ---
+    xbar_a = hw.xbar_area_mm2
+    per_a = per.area_mm2
+    if cfg.style == "adc":
+        unit = xbar_a + per_a + hw.sna_area_mm2
+    else:
+        n_comp = 2 if cfg.levels == "ternary" else 1
+        unit = xbar_a + per_a + n_comp * r * hw.comparator_area_mm2
+    t.area_mm2 = n_xbars * unit
+    return t
+
+
+def evaluate_workload(
+    layers: Sequence[LayerShape],
+    cfg: SystemConfig,
+    hw: HwParams = DEFAULT_HW,
+    layer_sparsity: Optional[Dict[str, float]] = None,
+) -> Tally:
+    total = Tally()
+    for layer in layers:
+        sp = None if layer_sparsity is None else layer_sparsity.get(layer.name)
+        t = evaluate_layer(layer, cfg, hw, sparsity=sp)
+        for k, v in t.breakdown.items():
+            total.add(k, v)
+        total.latency_ns += t.latency_ns       # layers run sequentially
+        total.area_mm2 += t.area_mm2           # all layers resident (PUMA)
+    return total

@@ -1,0 +1,109 @@
+"""Workload layer shapes for the paper's benchmark suite (§5.1).
+
+CIFAR-10: ResNet-20/32/44 [16], Wide-ResNet-20 [25], VGG-9/11 [1].
+ImageNet: ResNet-18 (for the Fig. 5(b) EDAP comparison).
+Convolutions map to crossbars via im2col: K = kh*kw*cin, one input
+vector per output spatial position.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.hwmodel.system import LayerShape
+
+
+def _conv(name, cin, cout, hw_out, k=3) -> LayerShape:
+    return LayerShape(name, k * k * cin, cout, hw_out * hw_out)
+
+
+def _fc(name, k, o) -> LayerShape:
+    return LayerShape(name, k, o, 1)
+
+
+def resnet_cifar(n_per_stage: int, widths=(16, 32, 64), name="resnet") -> List[LayerShape]:
+    """6n+2 CIFAR ResNet: 3 stages at 32/16/8 spatial resolution."""
+    w1, w2, w3 = widths
+    layers = [_conv(f"{name}.conv1", 3, w1, 32)]
+    for i in range(n_per_stage * 2):
+        layers.append(_conv(f"{name}.s1.{i}", w1, w1, 32))
+    layers.append(_conv(f"{name}.s2.0", w1, w2, 16))
+    layers.append(LayerShape(f"{name}.s2.ds", w1, w2, 16 * 16))  # 1x1 downsample
+    for i in range(1, n_per_stage * 2):
+        layers.append(_conv(f"{name}.s2.{i}", w2, w2, 16))
+    layers.append(_conv(f"{name}.s3.0", w2, w3, 8))
+    layers.append(LayerShape(f"{name}.s3.ds", w2, w3, 8 * 8))
+    for i in range(1, n_per_stage * 2):
+        layers.append(_conv(f"{name}.s3.{i}", w3, w3, 8))
+    layers.append(_fc(f"{name}.fc", w3, 10))
+    return layers
+
+
+def resnet20() -> List[LayerShape]:
+    return resnet_cifar(3, name="resnet20")
+
+
+def resnet32() -> List[LayerShape]:
+    return resnet_cifar(5, name="resnet32")
+
+
+def resnet44() -> List[LayerShape]:
+    return resnet_cifar(7, name="resnet44")
+
+
+def wide_resnet20() -> List[LayerShape]:
+    """Wide ResNet-20 as used by [25] (4x width multiplier)."""
+    return resnet_cifar(3, widths=(64, 128, 256), name="wrn20")
+
+
+def vgg9() -> List[LayerShape]:
+    """CIFAR VGG-9 following the d-psgd reference configs [1]."""
+    return [
+        _conv("vgg9.c1", 3, 64, 32),
+        _conv("vgg9.c2", 64, 64, 32),
+        _conv("vgg9.c3", 64, 128, 16),
+        _conv("vgg9.c4", 128, 128, 16),
+        _conv("vgg9.c5", 128, 256, 8),
+        _conv("vgg9.c6", 256, 256, 8),
+        _fc("vgg9.fc1", 256 * 4 * 4, 512),
+        _fc("vgg9.fc2", 512, 10),
+    ]
+
+
+def vgg11() -> List[LayerShape]:
+    """VGG-11 (config A) adapted to 32x32 inputs."""
+    return [
+        _conv("vgg11.c1", 3, 64, 32),
+        _conv("vgg11.c2", 64, 128, 16),
+        _conv("vgg11.c3", 128, 256, 8),
+        _conv("vgg11.c4", 256, 256, 8),
+        _conv("vgg11.c5", 256, 512, 4),
+        _conv("vgg11.c6", 512, 512, 4),
+        _conv("vgg11.c7", 512, 512, 2),
+        _conv("vgg11.c8", 512, 512, 2),
+        _fc("vgg11.fc1", 512, 512),
+        _fc("vgg11.fc2", 512, 10),
+    ]
+
+
+def resnet18_imagenet() -> List[LayerShape]:
+    L = [LayerShape("r18.conv1", 7 * 7 * 3, 64, 112 * 112)]
+    plan = [(64, 64, 56, 4), (64, 128, 28, 4), (128, 256, 14, 4), (256, 512, 7, 4)]
+    for idx, (cin, cout, sp, n) in enumerate(plan):
+        L.append(_conv(f"r18.s{idx}.0", cin, cout, sp))
+        if cin != cout:
+            L.append(LayerShape(f"r18.s{idx}.ds", cin, cout, sp * sp))
+        for i in range(1, n):
+            L.append(_conv(f"r18.s{idx}.{i}", cout, cout, sp))
+    L.append(_fc("r18.fc", 512, 1000))
+    return L
+
+
+WORKLOADS = {
+    "resnet20": resnet20,
+    "resnet32": resnet32,
+    "resnet44": resnet44,
+    "wrn20": wide_resnet20,
+    "vgg9": vgg9,
+    "vgg11": vgg11,
+    "resnet18_imagenet": resnet18_imagenet,
+}

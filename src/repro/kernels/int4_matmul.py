@@ -1,0 +1,94 @@
+"""Weight-stationary int4 matmul Pallas kernel (PSQ deployment path).
+
+PSQ-trained networks carry 4-bit integer weights; at decode time the
+dominant roofline term is HBM weight traffic. Packing two 4-bit codes per
+byte cuts weight bytes 4x vs bf16 — nibbles are unpacked in VREGs right
+before the MXU dot, so HBM only ever sees packed bytes. This is the
+TPU-native counterpart of HCiM's weight-stationary crossbars and the main
+lever for the decode-cell hillclimbs in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _int4_kernel(x_ref, w_ref, o_ref):
+    t = pl.program_id(2)
+    x = x_ref[...].astype(jnp.float32)            # (BB, BK)
+    w8 = w_ref[...].astype(jnp.int32)             # (BK//2, BO) packed
+    lo = w8 & 0xF
+    hi = (w8 >> 4) & 0xF
+    lo = lo - 16 * (lo >= 8).astype(jnp.int32)    # sign-extend nibble
+    hi = hi - 16 * (hi >= 8).astype(jnp.int32)
+    kk, bo = w8.shape
+    w_int = jnp.stack([lo, hi], axis=1).reshape(2 * kk, bo).astype(jnp.float32)
+    acc = jax.lax.dot(
+        x.astype(jnp.bfloat16),
+        w_int.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += acc
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_o", "block_k", "interpret")
+)
+def int4_matmul_kernel(
+    x: jax.Array,            # (B, K)
+    w_packed: jax.Array,     # (K//2, O) int8
+    scale: jax.Array,        # (O,) per-channel dequant scale
+    *,
+    block_b: int = 128,
+    block_o: int = 256,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    b, k = x.shape
+    o = w_packed.shape[1]
+    assert w_packed.shape[0] * 2 == k, "packed weight K mismatch"
+
+    bb = min(block_b, _ceil_to(b, 8))
+    bo = min(block_o, _ceil_to(o, 128))
+    bk = min(block_k, _ceil_to(k, 256))
+    b_pad, o_pad, k_pad = _ceil_to(b, bb), _ceil_to(o, bo), _ceil_to(k, bk)
+
+    x_p = jnp.pad(x, ((0, b_pad - b), (0, k_pad - k)))
+    w_p = jnp.pad(w_packed, ((0, (k_pad - k) // 2), (0, o_pad - o)))
+
+    grid = (b_pad // bb, o_pad // bo, k_pad // bk)
+    y = pl.pallas_call(
+        _int4_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bk), lambda bi, oi, ti: (bi, ti)),
+            pl.BlockSpec((bk // 2, bo), lambda bi, oi, ti: (ti, oi)),
+        ],
+        out_specs=pl.BlockSpec((bb, bo), lambda bi, oi, ti: (bi, oi)),
+        out_shape=jax.ShapeDtypeStruct((b_pad, o_pad), jnp.float32),
+        interpret=interpret,
+    )(x_p, w_p)
+    return y[:b, :o] * scale[None, :]
+
+
+def pack_int4(w_int: jax.Array) -> jax.Array:
+    """Pack integer codes in [-8, 7] (even K) into bytes, row-interleaved."""
+    k, o = w_int.shape
+    assert k % 2 == 0
+    w = jnp.mod(w_int.astype(jnp.int32), 16)      # two's-complement nibbles
+    lo = w[0::2]
+    hi = w[1::2]
+    return (lo | (hi << 4)).astype(jnp.int8)

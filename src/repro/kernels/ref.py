@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-exact, no tiling tricks).
+
+These mirror the kernels' integer I/O contracts exactly; the QAT-level
+semantics (LSQ quantizers, STE) live in :mod:`repro.core.psq` and have
+their own materialized reference there.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import bit_weights
+
+
+def psq_matmul_ref(
+    x_int: jax.Array,        # (B, K) integer-valued f32
+    w_int: jax.Array,        # (K, O)
+    sf_q: jax.Array,         # broadcastable to (T, n_a, n_w, O)
+    alpha: jax.Array,        # ()
+    *,
+    n_a: int,
+    n_w: int,
+    levels: str,
+    adc_bits: int = 7,
+    xbar_rows: int = 128,
+) -> jax.Array:
+    """Oracle for :func:`repro.kernels.psq_matmul.psq_matmul_kernel`."""
+    b, k = x_int.shape
+    o = w_int.shape[1]
+    r = xbar_rows
+    t = math.ceil(k / r)
+    kp = t * r
+    x = jnp.pad(x_int, ((0, 0), (0, kp - k))).reshape(b, t, r)
+    w = jnp.pad(w_int, ((0, kp - k), (0, 0))).reshape(t, r, o)
+
+    u_x = jnp.mod(x, 2.0 ** n_a)
+    u_w = jnp.mod(w, 2.0 ** n_w)
+    xbits = jnp.stack(
+        [jnp.mod(jnp.floor(u_x / 2.0 ** j), 2.0) for j in range(n_a)]
+    )  # (n_a, B, T, R)
+    wbits = jnp.stack(
+        [jnp.mod(jnp.floor(u_w / 2.0 ** kk), 2.0) for kk in range(n_w)]
+    )  # (n_w, T, R, O)
+    ps = jnp.einsum("jbtr,ktro->jkbto", xbits, wbits,
+                    precision=jax.lax.Precision.HIGHEST)
+    sigma = bit_weights(n_a)
+    kappa = bit_weights(n_w)
+
+    if levels == "adc":
+        step = max(1.0, xbar_rows / float(2 ** adc_bits))
+        qmax = float(2 ** adc_bits - 1)
+        code = jnp.clip(jnp.floor(ps / step + 0.5), 0.0, qmax)
+        return jnp.einsum("j,k,jkbto->bo", sigma, kappa, code * step)
+
+    rowsum = jnp.sum(xbits, axis=-1)                    # (n_a, B, T)
+    a = 2.0 * ps - rowsum[:, None, :, :, None]
+    if levels == "ternary":
+        al = jnp.maximum(alpha, 1e-6)
+        p = jnp.where(a >= al, 1.0, jnp.where(a <= -al, -1.0, 0.0))
+    else:
+        p = jnp.where(a >= 0.0, 1.0, -1.0)
+    sf_full = jnp.broadcast_to(sf_q, (t, n_a, n_w, o))
+    y = 0.5 * jnp.einsum("j,k,jkbto,tjko->bo", sigma, kappa, p, sf_full)
+    c_w = float(jnp.sum(kappa))
+    return y + 0.5 * c_w * jnp.sum(x_int, axis=-1, keepdims=True)
+
+
+def int4_matmul_ref(
+    w_packed: jax.Array,     # (K//2, O) int8, two 4-bit codes per byte
+    scale: jax.Array,        # (O,) or (K//group, O) dequant scales
+    x: jax.Array,            # (B, K) activations
+) -> jax.Array:
+    """Oracle for the weight-stationary int4 decode matmul."""
+    kk, o = w_packed.shape
+    w8 = w_packed.astype(jnp.int32)
+    lo = w8 & 0xF
+    hi = (w8 >> 4) & 0xF
+    lo = lo - 16 * (lo >= 8)
+    hi = hi - 16 * (hi >= 8)
+    # packed row r holds original rows 2r (low nibble) and 2r+1 (high)
+    w_int = jnp.stack([lo, hi], axis=1).reshape(2 * kk, o).astype(jnp.float32)
+    if scale.ndim == 1:
+        w_deq = w_int * scale[None, :]
+    else:
+        group = (2 * kk) // scale.shape[0]
+        w_deq = w_int * jnp.repeat(scale, group, axis=0)
+    return jnp.dot(x.astype(jnp.float32), w_deq,
+                   precision=jax.lax.Precision.HIGHEST)

@@ -1,0 +1,359 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: parameters,
+optimizer state, batches and KV caches enter as ShapeDtypeStructs with
+explicit NamedShardings; ``jit(...).lower(...).compile()`` must succeed
+on the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh, and the
+compiled artifact yields the memory/cost/collective numbers that feed
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch tinyllama-1.1b --shape train_4k [--multi-pod] [--quant psq]
+    PYTHONPATH=src python -m repro.launch.dryrun --all  # full matrix
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.core.config import PSQ_TERNARY, QuantConfig
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.models import decode as D
+from repro.parallel.sharding import RULES_2D, RULES_3D, axis_rules
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import make_train_step
+
+from repro.launch.hlo_analysis import analyze as hlo_analyze
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+
+def model_flops(cfg, cell) -> float:
+    """Analytic model FLOPs (global): 6ND/2ND matmul term + the
+    attention quadratic term (dominant at 32k contexts), for §Roofline."""
+    n = cfg.param_count()
+    if cfg.family == "moe":
+        # active params only: top_k of n_experts expert FFNs
+        e_ff = cfg.moe_d_ff or cfg.d_ff
+        expert_p = cfg.n_experts * 3 * cfg.d_model * e_ff * cfg.n_layers
+        active = n - expert_p + expert_p * cfg.moe_top_k / cfg.n_experts
+        n = active
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    fwd = 2.0 * n * tokens
+
+    # attention core: QK^T and AV, 2 mult-adds each, causal halves it;
+    # SWA replaces S with the window; SSM/xLSTM layers are linear in S
+    # (chunked quadratic with chunk 128).
+    s = cell.seq_len
+    hd = cfg.resolved_head_dim
+    kv_len = min(cfg.sliding_window, s) if cfg.sliding_window else s
+    if cell.kind == "decode":
+        # one query over the cache
+        per_attn_layer = 4.0 * cell.global_batch * kv_len * cfg.n_heads * hd
+        tokens_eff = cell.global_batch
+    else:
+        per_attn_layer = 2.0 * cell.global_batch * s * kv_len * cfg.n_heads * hd
+        tokens_eff = tokens
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // max(cfg.attn_every, 1)
+        chunk_side = 128
+        n_ssm = cfg.n_layers - n_attn
+        di = cfg.ssm_expand * cfg.d_model
+        ssm_core = 4.0 * tokens_eff * chunk_side * di * n_ssm
+        attn_fl = per_attn_layer * n_attn + ssm_core
+    elif cfg.family == "ssm":
+        di = int(cfg.xlstm_proj_factor * cfg.d_model)
+        attn_fl = 4.0 * tokens_eff * 128 * di * cfg.n_layers
+    elif cfg.family == "encdec":
+        # bidirectional encoder (no causal halving) + causal decoder +
+        # cross attention
+        enc = 4.0 * cell.global_batch * s * s * cfg.n_heads * hd * cfg.n_enc_layers
+        attn_fl = per_attn_layer * cfg.n_layers * 2 + (
+            enc if cell.kind != "decode" else
+            4.0 * cell.global_batch * s * cfg.n_heads * hd * cfg.n_layers
+        )
+    else:
+        attn_fl = per_attn_layer * cfg.n_layers
+
+    fwd = fwd + attn_fl
+    if cell.kind == "train":
+        return 3.0 * fwd  # fwd + 2x bwd
+    return fwd
+
+
+def _quant_cfg(quant: str) -> Optional[QuantConfig]:
+    if quant == "none":
+        return None
+    if quant == "psq":
+        return PSQ_TERNARY
+    if quant == "binary":
+        return dataclasses.replace(PSQ_TERNARY, psq_levels="binary")
+    raise ValueError(quant)
+
+
+# §Perf hillclimb variants: config/sharding deltas applied per cell
+VARIANTS = {
+    "base": {},
+    "flash": {"attn_impl": "flash"},
+    "flash_bf16": {"attn_impl": "flash", "compute_dtype": "bf16"},
+    "bf16": {"compute_dtype": "bf16"},
+    "fsdp": {},           # + shard a weight dim over the data axis (ZeRO-3)
+    "flash_bf16_fsdp": {"attn_impl": "flash", "compute_dtype": "bf16"},
+    "int4serve": {},      # decode: int4-packed PSQ deployment weights
+    "int4serve_flash": {"attn_impl": "flash"},
+    "densemoe": {"moe_impl": "dense"},
+    "densemoe_flash_bf16": {"moe_impl": "dense", "attn_impl": "flash",
+                            "compute_dtype": "bf16"},
+    # decode: shard the KV cache on batch only (local cache updates — no
+    # cross-shard select on the sequence axis), optionally + int4 weights
+    "kvbatch": {},
+    "kvbatch_int4": {},
+}
+
+
+def _fsdp_pspec(path, leaf, mesh):
+    """param_pspec + shard the largest leftover dim over 'data' (ZeRO-3)."""
+    base = S.param_pspec(path, leaf, mesh)
+    spec = list(base) + [None] * (leaf.ndim - len(base))
+    if leaf.ndim >= 2 and "data" not in [s for s in spec if isinstance(s, str)]:
+        cand = sorted(
+            range(leaf.ndim), key=lambda i: -leaf.shape[i]
+        )
+        for i in cand:
+            if spec[i] is None and leaf.shape[i] % mesh.shape["data"] == 0:
+                spec[i] = "data"
+                break
+    while spec and spec[-1] is None:
+        spec.pop()
+    from jax.sharding import PartitionSpec as _P
+
+    return _P(*spec)
+
+
+def build_cell(arch: str, shape: str, multi_pod: bool, quant: str = "none",
+               variant: str = "base"):
+    """Returns (jitted_fn, example_args_sds) for one cell, inside mesh ctx."""
+    cfg = get_config(arch)
+    qc = _quant_cfg(quant)
+    if qc is not None:
+        cfg = cfg.with_quant(qc)
+    if VARIANTS.get(variant):
+        cfg = dataclasses.replace(cfg, **VARIANTS[variant])
+    cell = S.SHAPES[shape]
+    ok, why = S.cell_is_applicable(cfg, cell)
+    if not ok:
+        return None, why
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = dict(RULES_3D if multi_pod else RULES_2D)
+    dp = ("pod", "data") if multi_pod else "data"
+
+    if variant.startswith("int4serve") or variant.endswith("_int4"):
+        from repro.core.psq_linear import pack_tree_for_serving
+
+        params_sds = jax.eval_shape(
+            lambda: pack_tree_for_serving(
+                T.init_model(jax.random.PRNGKey(0), cfg)
+            )
+        )
+    else:
+        params_sds = S.abstract_params(cfg)
+    spec_fn = _fsdp_pspec if "fsdp" in variant else S.param_pspec
+    param_sh = S.tree_shardings(params_sds, mesh, spec_fn)
+
+    if cell.kind == "train":
+        cfg_t = dataclasses.replace(cfg, remat="block")
+        state_sds = S.abstract_state(cfg_t)
+        # params and Adam moments share the same layout rules
+        from repro.train.trainer import TrainState
+        from repro.train.optimizer import OptState
+
+        state_sh = TrainState(
+            params=param_sh,
+            opt=OptState(
+                step=NamedSharding(mesh, P()), mu=param_sh, nu=param_sh
+            ),
+        )
+        batch_sds = S.batch_specs(cfg_t, cell)
+        batch_sh = S.batch_shardings(batch_sds, mesh, dp)
+        step = make_train_step(cfg_t, OptConfig())
+        fn = jax.jit(step, in_shardings=(state_sh, batch_sh))
+        args = (state_sds, batch_sds)
+        return (mesh, rules, fn, args), ""
+
+    if cell.kind == "prefill":
+        batch_sds = S.batch_specs(cfg, cell)
+        batch_sh = S.batch_shardings(batch_sds, mesh, dp)
+
+        def prefill_logits(params, batch):
+            logits, _ = T.forward(params, cfg, batch, last_only=True)
+            return logits
+
+        fn = jax.jit(prefill_logits, in_shardings=(param_sh, batch_sh))
+        return (mesh, rules, fn, (params_sds, batch_sds)), ""
+
+    # decode
+    long_ctx = cell.seq_len >= 100_000
+    rules = dict(rules, kv_seq="model")
+    batch_sds = S.batch_specs(cfg, cell)
+    batch_sh = S.batch_shardings(batch_sds, mesh, dp)
+    cache_sds = S.abstract_cache(cfg, cell, params_sds)
+
+    def cache_fn(p_, l_, m_):
+        spec = S.cache_pspec(p_, l_, m_, long_ctx, dp)
+        if variant.startswith("kvbatch"):
+            spec = P(*[None if a == "model" else a for a in spec])
+        return spec
+
+    cache_sh = S.tree_shardings(cache_sds, mesh, cache_fn)
+
+    def serve_step(params, token, cache):
+        return D.decode_step(params, cfg, token, cache)
+
+    # donate the cache: in-place DUS instead of a full write-back per layer
+    fn = jax.jit(serve_step, in_shardings=(param_sh, batch_sh["token"], cache_sh),
+                 donate_argnums=(2,))
+    return (mesh, rules, fn, (params_sds, batch_sds["token"], cache_sds)), ""
+
+
+def run_cell(
+    arch: str, shape: str, multi_pod: bool, quant: str = "none",
+    variant: str = "base", save: bool = True, verbose: bool = True,
+) -> Dict[str, Any]:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}|{shape}|{mesh_name}|{quant}|{variant}"
+    built, why = build_cell(arch, shape, multi_pod, quant, variant)
+    if built is None:
+        rec = {"cell": tag, "status": "skipped", "reason": why}
+        if verbose:
+            print(f"[dryrun] SKIP  {tag}: {why}", flush=True)
+        return rec
+
+    mesh, rules, fn, args = built
+    t0 = time.time()
+    try:
+        with mesh:
+            with axis_rules(rules, mesh):
+                lowered = fn.lower(*args)
+                t_lower = time.time() - t0
+                compiled = lowered.compile()
+                t_compile = time.time() - t0 - t_lower
+    except Exception as e:  # sharding/compile bug in this cell
+        rec = {"cell": tag, "status": "failed",
+               "error": f"{type(e).__name__}: {str(e)[:500]}"}
+        if verbose:
+            print(f"[dryrun] FAIL  {tag}: {rec['error'][:200]}", flush=True)
+        if save:
+            os.makedirs(RESULTS_DIR, exist_ok=True)
+            sfx = "" if variant == "base" else f"_{variant}"
+            with open(os.path.join(
+                RESULTS_DIR,
+                f"{arch}_{shape}_{'2x16x16' if multi_pod else '16x16'}_{quant}{sfx}.json",
+            ), "w") as f:
+                json.dump(rec, f, indent=1)
+        return rec
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # scan-aware accounting (cost_analysis counts while bodies once)
+    an = hlo_analyze(hlo)
+    cfg_full = get_config(arch)
+    cell = S.SHAPES[shape]
+    n_chips = 512 if multi_pod else 256
+
+    rec = {
+        "cell": tag,
+        "status": "ok",
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "quant": quant,
+        "variant": variant,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops_per_device": an["flops"],
+        "bytes_per_device": an["bytes"],
+        "collective_bytes_per_device": an["collectives"],
+        "xla_cost_analysis_flops_raw": cost.get("flops", 0.0),
+        "model_flops_global": model_flops(cfg_full, cell),
+        "n_chips": n_chips,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+        },
+    }
+    if verbose:
+        gb = 1024 ** 3
+        coll = an["collectives"]
+        print(
+            f"[dryrun] OK    {tag}: lower {t_lower:.0f}s compile "
+            f"{t_compile:.0f}s | {an['flops']/1e12:.2f} TFLOP/dev "
+            f"(model {rec['model_flops_global']/n_chips/1e12:.2f}) "
+            f"| args {rec['memory']['argument_bytes']/gb:.2f} GiB/dev "
+            f"temp {rec['memory']['temp_bytes']/gb:.2f} GiB/dev "
+            f"| coll {coll.get('total', 0)/1e9:.3f} GB/dev",
+            flush=True,
+        )
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        suffix = "" if variant == "base" else f"_{variant}"
+        stem = os.path.join(RESULTS_DIR, f"{arch}_{shape}_{mesh_name}_{quant}{suffix}")
+        with open(stem + ".json", "w") as f:
+            json.dump(rec, f, indent=1)
+        if len(hlo) < 200 * 1024 * 1024:  # keep HLO for offline re-analysis
+            import gzip
+
+            with gzip.open(stem + ".hlo.gz", "wt") as f:
+                f.write(hlo)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--shape", default="train_4k", choices=list(S.SHAPES) + ["all"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--quant", default="none", choices=["none", "psq", "binary"])
+    ap.add_argument("--all", action="store_true", help="full 40-cell matrix")
+    ap.add_argument("--variant", default="base", choices=list(VARIANTS))
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or args.arch == "all") else [args.arch]
+    shapes = list(S.SHAPES) if (args.all or args.shape == "all") else [args.shape]
+    meshes = [False, True] if (args.all or args.both_meshes) else [args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                results.append(run_cell(arch, shape, mp, args.quant, args.variant))
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    print(f"[dryrun] done: {n_ok} compiled, {n_skip} skipped, "
+          f"{len(results) - n_ok - n_skip} failed")
+    if n_ok + n_skip < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

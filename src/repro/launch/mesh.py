@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Single pod: 16 x 16 = 256 chips, axes ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis carries only data parallelism (gradient all-reduce), i.e. the
+only collectives crossing the inter-pod DCN are reductions, optionally
+int8-compressed (repro.train.fault.compressed_gradient).
+
+A function, not a module constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Whatever-is-available mesh for tests / elastic re-meshing demos."""
+    n = len(jax.devices())
+    from repro.train.fault import remesh_plan
+
+    data, model = remesh_plan(n, model_parallel)
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,48 @@
+"""Re-derive dry-run JSON metrics from stored .hlo.gz without recompiling.
+
+The dry-run persists post-optimization HLO next to each cell's JSON;
+when the HLO analyzer improves, this tool refreshes flops/bytes/
+collectives in place (seconds instead of the ~40 min compile sweep).
+
+    PYTHONPATH=src python -m repro.launch.reanalyze
+"""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+
+from repro.launch.hlo_analysis import analyze
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+
+def main():
+    n = 0
+    for fn in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        stem = fn[: -len(".json")]
+        hlo_fn = stem + ".hlo.gz"
+        if not os.path.exists(hlo_fn):
+            continue
+        with open(fn) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        with gzip.open(hlo_fn, "rt") as f:
+            hlo = f.read()
+        an = analyze(hlo)
+        rec["flops_per_device"] = an["flops"]
+        rec["bytes_per_device"] = an["bytes"]
+        rec["collective_bytes_per_device"] = an["collectives"]
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+        print(f"[reanalyze] {os.path.basename(stem)}: "
+              f"{an['flops']/1e12:.2f} TF, {an['bytes']/1e9:.1f} GB, "
+              f"coll {an['collectives'].get('total',0)/1e9:.2f} GB", flush=True)
+    print(f"[reanalyze] {n} cells refreshed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""§Roofline: three-term analysis from the compiled dry-run artifacts.
+
+    compute_s    = HLO_FLOPs_per_device / peak_FLOPs        (197 TF bf16)
+    memory_s     = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+    collective_s = collective_bytes_per_device / link_bw    (50 GB/s/link)
+
+FLOPs/bytes come from the scan-aware HLO analyzer (hlo_analysis.py);
+collective bytes use the result-size proxy summed over all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute with loop
+trip multiplication. MODEL_FLOPS is the analytic 6ND(+attention) count;
+its ratio to HLO FLOPs flags remat/dispatch waste.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--mesh 16x16] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import get_config
+from repro.launch import specs as S
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link (1-link conservative)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+
+def load_cells(mesh: Optional[str] = None, quant: Optional[str] = None) -> List[Dict]:
+    out = []
+    for fn in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(fn) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            out.append(rec)
+            continue
+        if mesh and rec["mesh"] != mesh:
+            continue
+        if quant is not None and rec.get("quant", "none") != quant:
+            continue
+        out.append(rec)
+    return out
+
+
+def roofline_terms(rec: Dict) -> Dict:
+    from repro.launch.dryrun import model_flops  # late import (XLA flags)
+
+    cfg = get_config(rec["arch"])
+    cell = S.SHAPES[rec["shape"]]
+    n_chips = rec.get("n_chips", 256)
+    mf = model_flops(cfg, cell)
+    compute_s = rec["flops_per_device"] / PEAK_FLOPS
+    memory_s = rec["bytes_per_device"] / HBM_BW
+    coll = rec["collective_bytes_per_device"].get("total", 0.0)
+    collective_s = coll / LINK_BW
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "model_flops_per_chip": mf / n_chips,
+        "useful_ratio": (mf / n_chips) / max(rec["flops_per_device"], 1.0),
+        "step_s_bound": max(compute_s, memory_s, collective_s),
+    }
+    dom = max(
+        ("compute", compute_s), ("memory", memory_s),
+        ("collective", collective_s), key=lambda kv: kv[1],
+    )[0]
+    terms["dominant"] = dom
+    # roofline fraction: useful model flops per chip over what the peak
+    # could deliver in the bound step time
+    terms["roofline_frac"] = (
+        terms["model_flops_per_chip"] / PEAK_FLOPS
+    ) / max(terms["step_s_bound"], 1e-12)
+    return terms
+
+
+_SUGGEST = {
+    "compute": "cut non-model FLOPs (remat policy, MoE dispatch, attn chunking)",
+    "memory": "shrink resident/streamed bytes (int4/PSQ weights, bf16 master, fused attn)",
+    "collective": "reshard to cut gathers (seq-parallel attn, reduce-scatter grads, overlap)",
+}
+
+
+def table(cells: List[Dict], md: bool = True) -> str:
+    rows = []
+    for rec in cells:
+        if rec.get("status") == "skipped":
+            rows.append(
+                (rec["cell"].split("|")[0], rec["cell"].split("|")[1], "—",
+                 "—", "—", "—", "—", "—", f"SKIP: {rec['reason'][:40]}")
+            )
+            continue
+        if rec.get("status") != "ok":
+            rows.append((rec.get("cell", "?"), "", "—", "—", "—", "—", "—",
+                         "—", f"FAIL"))
+            continue
+        t = roofline_terms(rec)
+        rows.append((
+            rec["arch"], rec["shape"],
+            f"{t['compute_s']*1e3:.1f}", f"{t['memory_s']*1e3:.1f}",
+            f"{t['collective_s']*1e3:.1f}", t["dominant"],
+            f"{t['useful_ratio']:.2f}", f"{t['roofline_frac']*100:.1f}%",
+            _SUGGEST[t["dominant"]],
+        ))
+    hdr = ("arch", "shape", "T_comp ms", "T_mem ms", "T_coll ms",
+           "bound", "useful", "roofline", "what would move it")
+    if not md:
+        return "\n".join(",".join(map(str, r)) for r in [hdr] + rows)
+    w = [max(len(str(r[i])) for r in [hdr] + rows) for i in range(len(hdr))]
+    lines = ["| " + " | ".join(str(h).ljust(w[i]) for i, h in enumerate(hdr)) + " |",
+             "|" + "|".join("-" * (w[i] + 2) for i in range(len(hdr))) + "|"]
+    for r in rows:
+        lines.append("| " + " | ".join(str(c).ljust(w[i]) for i, c in enumerate(r)) + " |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--quant", default="none")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    cells = load_cells(mesh=args.mesh, quant=args.quant)
+    print(table(cells, md=not args.csv))
+
+
+if __name__ == "__main__":
+    main()

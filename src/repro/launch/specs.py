@@ -1,0 +1,248 @@
+"""Abstract input specs + sharding for every (arch x shape x mesh) cell.
+
+``input_specs(arch, shape)`` returns ShapeDtypeStruct stand-ins (no
+device allocation) for everything the lowered step consumes; the
+companion ``*_shardings`` map them to NamedShardings via path-pattern
+rules with divisibility guards.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.models import decode as D
+from repro.train.optimizer import init_opt_state
+from repro.train.trainer import TrainState
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# shape cells (assigned input-shape set for the LM pool)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_is_applicable(cfg: ArchConfig, cell: ShapeCell) -> Tuple[bool, str]:
+    """long_500k only for sub-quadratic archs; decode only with a decoder."""
+    if cell.name == "long_500k" and not cfg.subquadratic:
+        return False, "full-attention arch: 500k context skipped (DESIGN.md)"
+    if cell.kind == "decode" and not cfg.has_decoder:
+        return False, "encoder-only arch has no decode step"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# batch specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+    b = cell.global_batch
+    s = cell.seq_len
+    i32 = jnp.int32
+    if cell.kind == "train":
+        out = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "targets": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if cfg.family == "encdec":
+            out["enc_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            out["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_len, cfg.d_model), jnp.bfloat16
+            )
+        return out
+    if cell.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "encdec":
+            out["enc_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            out["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_len, cfg.d_model), jnp.bfloat16
+            )
+        return out
+    # decode: one new token against a cache of seq_len
+    return {"token": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+def _batch_pspec(name: str, ndim: int, dp) -> P:
+    spec = [dp] + [None] * (ndim - 1)
+    return P(*spec)
+
+
+def batch_shardings(
+    specs: Dict[str, jax.ShapeDtypeStruct], mesh: Mesh, dp
+) -> Dict[str, NamedSharding]:
+    out = {}
+    dp_size = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        dp_size *= mesh.shape[a]
+    for k, v in specs.items():
+        ax = dp if v.shape and v.shape[0] % dp_size == 0 else None
+        out[k] = NamedSharding(mesh, _batch_pspec(k, max(v.ndim, 1), ax))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# parameter / optimizer / cache specs
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ArchConfig) -> PyTree:
+    return jax.eval_shape(lambda: T.init_model(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_state(cfg: ArchConfig) -> PyTree:
+    def mk():
+        p = T.init_model(jax.random.PRNGKey(0), cfg)
+        return TrainState(params=p, opt=init_opt_state(p))
+
+    return jax.eval_shape(mk)
+
+
+def abstract_cache(cfg: ArchConfig, cell: ShapeCell, params_sds: PyTree) -> PyTree:
+    enc_sds = None
+    if cfg.family == "encdec":
+        enc_sds = jax.ShapeDtypeStruct(
+            (cell.global_batch, cell.seq_len, cfg.d_model), jnp.bfloat16
+        )
+
+    def mk(p, enc):
+        return D.init_cache(
+            p, cfg, cell.global_batch, cell.seq_len,
+            dtype=jnp.bfloat16, enc_out=enc,
+        )
+
+    return jax.eval_shape(mk, params_sds, enc_sds)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _guard(spec, shape, mesh: Mesh) -> P:
+    """Drop mesh axes that do not divide the dimension."""
+    out = []
+    for i, ax in enumerate(spec):
+        if ax is not None and (
+            i >= len(shape) or shape[i] % _axis_size(mesh, ax) != 0
+        ):
+            ax = None
+        out.append(ax)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_pspec(path, leaf, mesh: Mesh, mdl="model") -> P:
+    """Pattern rules: trailing-dims spec by layer-name, leading stack dims
+    replicated."""
+    keys = [
+        str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+        for p in path
+    ]
+    last = keys[-1]
+    parent = keys[-2] if len(keys) >= 2 else ""
+    shape = leaf.shape
+
+    def tail(spec_tail):
+        lead = [None] * (len(shape) - len(spec_tail))
+        return _guard(lead + list(spec_tail), shape, mesh)
+
+    if "embed" in keys and last == "table":
+        return tail([mdl, None])
+    if "lm_head" in keys and last == "w":
+        return tail([None, mdl])
+    if parent in ("wq", "wk", "wv", "gate", "up", "fc", "up_proj", "in_proj",
+                  "w_in") and last in ("w", "w_packed", "w_scale"):
+        return tail([None, mdl])
+    if parent in ("wo", "down", "proj", "down_proj", "out_proj") and last in (
+            "w", "w_packed"):
+        return tail([mdl, None])
+    if parent in ("wo", "down", "proj", "down_proj", "out_proj") and last == "w_scale":
+        return tail([None, None])
+    if "lm_head" in keys and last in ("w_packed", "w_scale"):
+        return tail([None, mdl])
+    if last == "b" and parent in ("wq", "wk", "wv", "gate", "up", "fc",
+                                  "up_proj", "in_proj", "w_in"):
+        return tail([mdl])
+    if last == "router":
+        return tail([None, None])
+    if last in ("w_gate", "w_up", "w_down"):
+        e, d1, d2 = shape[-3], shape[-2], shape[-1]
+        if e % _axis_size(mesh, mdl) == 0:
+            return tail([mdl, None, None])       # expert parallelism
+        if last == "w_down":
+            return tail([None, mdl, None])       # shard expert ffn dim
+        return tail([None, None, mdl])
+    if last == "conv_w":
+        return tail([None, mdl])
+    if last == "conv_b":
+        return tail([mdl])
+    if last in ("A_log", "D", "dt_bias"):
+        return tail([mdl])
+    if last == "sf":                              # PSQ scale factors
+        return tail([None, None, None, mdl])
+    if last in ("wq", "wk", "wv") and len(shape) >= 3:  # xlstm head-blockdiag
+        return tail([mdl, None, None])
+    return P()  # norms, scalars, thresholds, biases -> replicated
+
+
+def tree_shardings(
+    tree_sds: PyTree, mesh: Mesh, spec_fn: Callable
+) -> PyTree:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_sds)
+    shardings = [
+        NamedSharding(mesh, spec_fn(path, leaf, mesh)) for path, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def cache_pspec(path, leaf, mesh: Mesh, long_ctx: bool, dp) -> P:
+    keys = [
+        str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+        for p in path
+    ]
+    last = keys[-1]
+    shape = leaf.shape
+    if last in ("k", "v") and len(shape) == 5:
+        # (L, B, S, Hk, D): batch over data; sequence over model (32k) or
+        # data x model (500k, where batch=1 cannot shard)
+        if long_ctx:
+            return _guard([None, None, ("data", "model"), None, None], shape, mesh)
+        return _guard([None, dp, "model", None, None], shape, mesh)
+    if last in ("state",):      # mamba (L, B, H, N, P)
+        return _guard([None, dp, "model", None, None], shape, mesh)
+    if last in ("C",):          # mlstm (L, B, H, dk, dv)
+        return _guard([None, dp, "model", None, None], shape, mesh)
+    if last in ("n",) and len(shape) >= 3:
+        return _guard([None, dp, "model"] + [None] * (len(shape) - 3), shape, mesh)
+    if len(shape) >= 2:
+        return _guard([None, dp] + [None] * (len(shape) - 2), shape, mesh)
+    return P()

@@ -1,0 +1,3 @@
+"""Model zoo: every projection is a PSQLinear (HCiM-quantizable)."""
+from repro.models.transformer import forward, init_model, loss_fn
+from repro.models.decode import decode_step, init_cache, prefill

@@ -1,0 +1,439 @@
+"""Serving-side execution on the stacked-layer layout.
+
+Caches are *stacked* pytrees (leading dim = #layers in the stack), so
+``decode_step`` is a single ``lax.scan`` over (layer params, layer cache)
+— one compiled block regardless of depth, with the KV cache sequence dim
+sharded per the active rules (``kv_seq``->model for 32k decode,
+``long_kv_seq``->data x model for the 500k cells).
+
+``decode_step`` is exactly what launch/dryrun.py lowers for the
+``decode_*`` / ``long_500k`` shape cells; ``prefill`` is the parallel
+prompt pass that fills the same cache structure (no token-by-token scan:
+attention K/V come from the parallel forward, SSM/xLSTM final states
+from their chunked forms).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.psq_linear import apply_linear
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.transformer import (
+    attn_config,
+    encode,
+    ssm_config,
+    stack_plan,
+    xlstm_config,
+)
+from repro.parallel.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+def _kv_zeros(n: int, batch: int, max_len: int, cfg: ArchConfig,
+              dtype, long_ctx: bool) -> Dict:
+    seq_ax = "long_kv_seq" if long_ctx else "kv_seq"
+    shape = (n, batch, max_len, cfg.n_kv_heads, cfg.resolved_head_dim)
+    z = jnp.zeros(shape, dtype)
+    z = constrain(z, None, "batch", seq_ax, "kv_heads", "head_dim")
+    return {"k": z, "v": z}
+
+
+def _stack_cache(init_one, n: int):
+    if n == 0:
+        return None
+    return jax.vmap(lambda _: init_one())(jnp.arange(n))
+
+
+def init_cache(
+    params: Params, cfg: ArchConfig, batch: int, max_len: int,
+    dtype=jnp.bfloat16, enc_out: Optional[jax.Array] = None,
+) -> Dict:
+    long_ctx = max_len >= 100_000
+    plan = stack_plan(cfg)
+    cache: Dict[str, Any] = {"length": jnp.zeros((), jnp.int32)}
+    if cfg.family in ("dense", "vlm", "moe", "encdec"):
+        cache["kv"] = _kv_zeros(cfg.n_layers, batch, max_len, cfg, dtype, long_ctx)
+    elif cfg.family == "hybrid":
+        g, pg, tail = plan["groups"], plan["per_group"], plan["tail"]
+        scfg = ssm_config(cfg)
+        cache["ssm_groups"] = _stack_cache(
+            lambda: ssm_mod.init_mamba2_cache(batch, scfg), g * pg
+        )
+        cache["ssm_tail"] = _stack_cache(
+            lambda: ssm_mod.init_mamba2_cache(batch, scfg), tail
+        )
+        cache["kv_shared"] = _kv_zeros(g, batch, max_len, cfg, dtype, long_ctx)
+    elif cfg.family == "ssm":
+        g, pg, tail = plan["groups"], plan["per_group"], plan["tail"]
+        xcfg = xlstm_config(cfg)
+        cache["mlstm_groups"] = _stack_cache(
+            lambda: xlstm_mod.init_mlstm_cache(batch, xcfg), g * pg
+        )
+        cache["slstm"] = _stack_cache(
+            lambda: xlstm_mod.init_slstm_cache(batch, xcfg), g
+        )
+        cache["mlstm_tail"] = _stack_cache(
+            lambda: xlstm_mod.init_mlstm_cache(batch, xcfg), tail
+        )
+    if cfg.family == "encdec" and enc_out is not None:
+        cross = jax.vmap(
+            lambda lp: attn_mod.cross_attention_cache(
+                lp["cross"], enc_out, attn_config(cfg), cfg.quant
+            )
+        )(params["blocks"])
+        cache["cross"] = cross
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+def _commit_kv(kv, upd, length):
+    """Write all layers' new-token K/V with ONE tiny in-place update
+    (never rewrite the stacked cache inside the layer scan)."""
+    return {
+        "k": jax.lax.dynamic_update_slice(
+            kv["k"], upd["k_new"], (0, 0, length, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(
+            kv["v"], upd["v_new"], (0, 0, length, 0, 0)),
+    }
+
+
+def _attn_decode_one(lp, x, kv, length, cfg: ArchConfig, params=None,
+                     shared: bool = False, cross_cache=None):
+    q = cfg.quant
+    ap = params["shared_attn"] if shared else lp["attn"]
+    nrm = params["shared_norm"] if shared else lp["norm1"]
+    h, (k_new, v_new), _ = attn_mod.decode_attention(
+        ap, L.apply_norm(cfg.norm_type, nrm, x),
+        {**kv, "length": length}, attn_config(cfg), q,
+        defer_update=True,
+    )
+    kv_out = {"k_new": k_new.astype(kv["k"].dtype),
+              "v_new": v_new.astype(kv["v"].dtype)}
+    x = x + h
+    if shared:
+        h, _ = L.apply_mlp(
+            params["shared_mlp"],
+            L.apply_norm(cfg.norm_type, params["shared_mlp_norm"], x),
+            cfg.act, q,
+        )
+        return x + h, kv_out
+    if cross_cache is not None:
+        h, _ = attn_mod.decode_cross_attention(
+            lp["cross"], L.apply_norm(cfg.norm_type, lp["norm_cross"], x),
+            cross_cache, attn_config(cfg), q,
+        )
+        x = x + h
+    z = L.apply_norm(cfg.norm_type, lp["norm2"], x)
+    if "moe" in lp:
+        h, _ = moe_mod.apply_moe(
+            lp["moe"], z, cfg.n_experts, cfg.moe_top_k, q,
+            act=cfg.act, chunk_size=cfg.moe_chunk, impl=cfg.moe_impl,
+        )
+        if cfg.dense_residual:
+            h2, _ = L.apply_mlp(lp["mlp"], z, cfg.act, q)
+            h = h + h2
+    else:
+        h, _ = L.apply_mlp(lp["mlp"], z, cfg.act, q)
+    return x + h, kv_out
+
+
+def decode_step(
+    params: Params, cfg: ArchConfig, token: jax.Array, cache: Dict
+) -> Tuple[jax.Array, Dict]:
+    """One serving step: token (B,1) -> (logits (B,1,V), updated cache)."""
+    q = cfg.quant
+    length = cache["length"]
+    x = L.apply_embedding(params["embed"], token)
+    new_cache: Dict[str, Any] = {"length": length + 1}
+    plan = stack_plan(cfg)
+
+    if cfg.family in ("dense", "vlm", "moe", "encdec"):
+        has_cross = "cross" in cache
+
+        def body(x_, xs):
+            lp, kv, cc = xs
+            x2, kv_out = _attn_decode_one(
+                lp, x_, kv, length, cfg, params=params,
+                cross_cache=cc if has_cross else None,
+            )
+            return x2, kv_out
+
+        xs = (
+            params["blocks"],
+            {"k": cache["kv"]["k"], "v": cache["kv"]["v"]},
+            cache.get("cross", jnp.zeros((cfg.n_layers,))),
+        )
+        x, kv_upd = jax.lax.scan(body, x, xs)
+        new_cache["kv"] = _commit_kv(cache["kv"], kv_upd, length)
+        if has_cross:
+            new_cache["cross"] = cache["cross"]
+    elif cfg.family == "hybrid":
+        g, pg, tail = plan["groups"], plan["per_group"], plan["tail"]
+        scfg = ssm_config(cfg)
+        if g > 0:
+            grouped_p = jax.tree.map(
+                lambda a: a.reshape(g, pg, *a.shape[1:]), params["mamba_groups"]
+            )
+            grouped_c = jax.tree.map(
+                lambda a: a.reshape(g, pg, *a.shape[1:]), cache["ssm_groups"]
+            )
+
+            def superstep(x_, xs):
+                gp, gc, kv = xs
+
+                def inner(xi, ys):
+                    lp, lc = ys
+                    h, st, _ = ssm_mod.decode_mamba2(
+                        lp["mamba"],
+                        L.apply_norm(cfg.norm_type, lp["norm1"], xi),
+                        lc, scfg, q,
+                    )
+                    return xi + h, st
+
+                x_, st_new = jax.lax.scan(inner, x_, (gp, gc))
+                x_, kv_out = _attn_decode_one(
+                    None, x_, kv, length, cfg, params=params, shared=True
+                )
+                return x_, (st_new, kv_out)
+
+            x, (ssm_new, kv_upd) = jax.lax.scan(
+                superstep, x,
+                (grouped_p, grouped_c,
+                 {"k": cache["kv_shared"]["k"], "v": cache["kv_shared"]["v"]}),
+            )
+            new_cache["ssm_groups"] = jax.tree.map(
+                lambda a: a.reshape(g * pg, *a.shape[2:]), ssm_new
+            )
+            new_cache["kv_shared"] = _commit_kv(cache["kv_shared"], kv_upd, length)
+        if tail:
+            def tail_body(x_, ys):
+                lp, lc = ys
+                h, st, _ = ssm_mod.decode_mamba2(
+                    lp["mamba"], L.apply_norm(cfg.norm_type, lp["norm1"], x_),
+                    lc, scfg, q,
+                )
+                return x_ + h, st
+
+            x, tail_new = jax.lax.scan(
+                tail_body, x, (params["mamba_tail"], cache["ssm_tail"])
+            )
+            new_cache["ssm_tail"] = tail_new
+        else:
+            new_cache["ssm_tail"] = cache.get("ssm_tail")
+    elif cfg.family == "ssm":
+        g, pg, tail = plan["groups"], plan["per_group"], plan["tail"]
+        xcfg = xlstm_config(cfg)
+
+        def ml_body(x_, ys):
+            lp, lc = ys
+            h, st, _ = xlstm_mod.decode_mlstm(
+                lp["mlstm"], L.apply_norm(cfg.norm_type, lp["norm1"], x_),
+                lc, xcfg, q,
+            )
+            return x_ + h, st
+
+        if g > 0:
+            grouped_p = jax.tree.map(
+                lambda a: a.reshape(g, pg, *a.shape[1:]), params["mlstm_groups"]
+            )
+            grouped_c = jax.tree.map(
+                lambda a: a.reshape(g, pg, *a.shape[1:]), cache["mlstm_groups"]
+            )
+
+            def superstep(x_, xs):
+                gp, gc, sp, sc = xs
+                x_, ml_new = jax.lax.scan(ml_body, x_, (gp, gc))
+                h, s_new, _ = xlstm_mod.decode_slstm(
+                    sp["slstm"],
+                    L.apply_norm(cfg.norm_type, sp["norm1"], x_),
+                    sc, xcfg, q,
+                )
+                return x_ + h, (ml_new, s_new)
+
+            x, (ml_new, sl_new) = jax.lax.scan(
+                superstep, x,
+                (grouped_p, grouped_c, params["slstm_blocks"], cache["slstm"]),
+            )
+            new_cache["mlstm_groups"] = jax.tree.map(
+                lambda a: a.reshape(g * pg, *a.shape[2:]), ml_new
+            )
+            new_cache["slstm"] = sl_new
+        if tail:
+            x, tail_new = jax.lax.scan(
+                ml_body, x, (params["mlstm_tail"], cache["mlstm_tail"])
+            )
+            new_cache["mlstm_tail"] = tail_new
+        else:
+            new_cache["mlstm_tail"] = cache.get("mlstm_tail")
+
+    x = L.apply_norm(cfg.norm_type, params["final_norm"], x)
+    logits = L.apply_lm_head(params["embed"], x, params.get("lm_head"))
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# parallel prefill
+# ---------------------------------------------------------------------------
+
+def prefill(
+    params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+    max_len: int, dtype=jnp.bfloat16,
+) -> Tuple[jax.Array, Dict]:
+    """Parallel prompt pass that returns (prompt logits, filled cache)."""
+    q = cfg.quant
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    x = L.apply_embedding(params["embed"], tokens)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
+    s = x.shape[1]
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = encode(params, cfg, batch["enc_embeds"], {})
+    cache = init_cache(params, cfg, b, max_len, dtype=dtype, enc_out=enc_out)
+    plan = stack_plan(cfg)
+
+    def attn_prefill_one(lp, x_, shared=False, cross=None):
+        ap = params["shared_attn"] if shared else lp["attn"]
+        nrm = params["shared_norm"] if shared else lp["norm1"]
+        xin = L.apply_norm(cfg.norm_type, nrm, x_)
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        qh, kh, vh, _ = attn_mod._project_qkv(ap, xin, attn_config(cfg), q, pos)
+        ctx = attn_mod._sdpa(qh, kh, vh, True, cfg.sliding_window)
+        h, _ = apply_linear(ap["wo"], ctx, q)
+        x_ = x_ + h
+        if shared:
+            h, _ = L.apply_mlp(
+                params["shared_mlp"],
+                L.apply_norm(cfg.norm_type, params["shared_mlp_norm"], x_),
+                cfg.act, q,
+            )
+            return x_ + h, (kh, vh)
+        if cross is not None:
+            h, _ = attn_mod.apply_attention(
+                lp["cross"], L.apply_norm(cfg.norm_type, lp["norm_cross"], x_),
+                attn_config(cfg), q, xkv=cross,
+            )
+            x_ = x_ + h
+        z = L.apply_norm(cfg.norm_type, lp["norm2"], x_)
+        if "moe" in lp:
+            h, _ = moe_mod.apply_moe(
+                lp["moe"], z, cfg.n_experts, cfg.moe_top_k, q,
+                act=cfg.act, chunk_size=cfg.moe_chunk, impl=cfg.moe_impl,
+            )
+            if cfg.dense_residual:
+                h2, _ = L.apply_mlp(lp["mlp"], z, cfg.act, q)
+                h = h + h2
+        else:
+            h, _ = L.apply_mlp(lp["mlp"], z, cfg.act, q)
+        return x_ + h, (kh, vh)
+
+    def write_kv(kv_stacked, k_layers, v_layers):
+        k = jax.lax.dynamic_update_slice_in_dim(
+            kv_stacked["k"], k_layers.astype(kv_stacked["k"].dtype), 0, axis=2
+        )
+        v = jax.lax.dynamic_update_slice_in_dim(
+            kv_stacked["v"], v_layers.astype(kv_stacked["v"].dtype), 0, axis=2
+        )
+        return {"k": k, "v": v}
+
+    if cfg.family in ("dense", "vlm", "moe", "encdec"):
+        def body(x_, xs):
+            lp, cc = xs
+            x2, kv = attn_prefill_one(
+                lp, x_, cross=enc_out if cfg.family == "encdec" else None
+            )
+            return x2, kv
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["blocks"], jnp.zeros((cfg.n_layers,)))
+        )
+        cache["kv"] = write_kv(cache["kv"], ks, vs)
+    elif cfg.family == "hybrid":
+        g, pg, tail = plan["groups"], plan["per_group"], plan["tail"]
+        scfg = ssm_config(cfg)
+
+        def mamba_one(x_, lp):
+            h, _, st = ssm_mod.apply_mamba2(
+                lp["mamba"], L.apply_norm(cfg.norm_type, lp["norm1"], x_),
+                scfg, q, return_cache=True,
+            )
+            return x_ + h, st
+
+        if g > 0:
+            grouped_p = jax.tree.map(
+                lambda a: a.reshape(g, pg, *a.shape[1:]), params["mamba_groups"]
+            )
+
+            def superstep(x_, gp):
+                x_, st = jax.lax.scan(mamba_one, x_, gp)
+                x_, kv = attn_prefill_one(None, x_, shared=True)
+                return x_, (st, kv)
+
+            x, (ssm_states, (ks, vs)) = jax.lax.scan(superstep, x, grouped_p)
+            cache["ssm_groups"] = jax.tree.map(
+                lambda a: a.reshape(g * pg, *a.shape[2:]), ssm_states
+            )
+            cache["kv_shared"] = write_kv(cache["kv_shared"], ks, vs)
+        if tail:
+            x, tail_states = jax.lax.scan(mamba_one, x, params["mamba_tail"])
+            cache["ssm_tail"] = tail_states
+    elif cfg.family == "ssm":
+        g, pg, tail = plan["groups"], plan["per_group"], plan["tail"]
+        xcfg = xlstm_config(cfg)
+
+        def ml_one(x_, lp):
+            h, _, st = xlstm_mod.apply_mlstm(
+                lp["mlstm"], L.apply_norm(cfg.norm_type, lp["norm1"], x_),
+                xcfg, q, return_cache=True,
+            )
+            return x_ + h, st
+
+        if g > 0:
+            grouped_p = jax.tree.map(
+                lambda a: a.reshape(g, pg, *a.shape[1:]), params["mlstm_groups"]
+            )
+
+            def superstep(x_, xs):
+                gp, sp = xs
+                x_, ml_st = jax.lax.scan(ml_one, x_, gp)
+                h, _, s_st = xlstm_mod.apply_slstm(
+                    sp["slstm"], L.apply_norm(cfg.norm_type, sp["norm1"], x_),
+                    xcfg, q, return_cache=True,
+                )
+                return x_ + h, (ml_st, s_st)
+
+            x, (ml_states, s_states) = jax.lax.scan(
+                superstep, x, (grouped_p, params["slstm_blocks"])
+            )
+            cache["mlstm_groups"] = jax.tree.map(
+                lambda a: a.reshape(g * pg, *a.shape[2:]), ml_states
+            )
+            cache["slstm"] = s_states
+        if tail:
+            x, tail_states = jax.lax.scan(ml_one, x, params["mlstm_tail"])
+            cache["mlstm_tail"] = tail_states
+
+    x = L.apply_norm(cfg.norm_type, params["final_norm"], x)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        x = x[:, batch["patch_embeds"].shape[1]:]
+    logits = L.apply_lm_head(params["embed"], x, params.get("lm_head"))
+    cache["length"] = jnp.asarray(s, jnp.int32)
+    return logits, cache

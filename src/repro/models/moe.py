@@ -1,0 +1,201 @@
+"""Mixture-of-Experts with capacity-based top-k dispatch (chunked).
+
+Designed for both 40-expert (granite, top-8) and 128-expert (arctic,
+top-2 + dense residual) configurations:
+
+* the router runs in fp32 (standard practice; it is *not* PSQ-quantized
+  — mirroring the paper's convention of keeping tiny accuracy-critical
+  layers at full precision),
+* tokens are processed in fixed-size chunks so the (E, C, d) gather
+  intermediate stays small at any sequence length — this is what keeps
+  the 1M-token arctic dry-run compilable,
+* expert weights live as (E, d, ff) stacked tensors: expert-parallel
+  (E over the model axis) when E divides the axis, otherwise the expert
+  FFN dim shards (granite's 40 experts on a 16-way axis),
+* an auxiliary load-balance loss (Switch-style) is returned in stats.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import QuantConfig
+from repro.core import psq
+from repro.core.psq_linear import init_linear
+from repro.parallel.sharding import constrain
+
+Params = Dict
+
+
+def init_moe(
+    key: jax.Array, d: int, d_ff: int, n_experts: int, top_k: int,
+    quant: QuantConfig, act: str = "swiglu",
+) -> Params:
+    ks = jax.random.split(key, 4)
+    std = 1.0 / math.sqrt(d)
+    p: Params = {
+        "router": jax.random.normal(ks[0], (d, n_experts)) * 0.02,
+        "w_gate": jax.random.normal(ks[1], (n_experts, d, d_ff)) * std,
+        "w_up": jax.random.normal(ks[2], (n_experts, d, d_ff)) * std,
+        "w_down": jax.random.normal(ks[3], (n_experts, d_ff, d))
+        * (1.0 / math.sqrt(d_ff)),
+    }
+    if quant.quantized:
+        # one PSQ quantizer state per expert weight family (layer-level
+        # scale factors per the paper; expert dim folds into the tile dim)
+        for name, (kin, out) in {
+            "w_gate": (d, d_ff), "w_up": (d, d_ff), "w_down": (d_ff, d)
+        }.items():
+            qp = psq.init_psq_params(key, kin, out, quant, w_std=std)
+            p[f"{name}_q"] = qp
+    return p
+
+
+def _expert_ffn(
+    p: Params, xs: jax.Array, quant: QuantConfig, act: str
+) -> jax.Array:
+    """xs: (E, C, d) gathered tokens -> (E, C, d) expert outputs."""
+    if quant.quantized:
+        # PSQ per expert: vmap the quantized matmul over the expert dim,
+        # sharing the per-layer quantizer state (paper quantizes at layer
+        # granularity; scale-factor tensors are per-layer here).
+        def one(xe, wg, wu, wd):
+            g, _ = psq.psq_matmul(xe, wg, p["w_gate_q"], quant)
+            u, _ = psq.psq_matmul(xe, wu, p["w_up_q"], quant)
+            h = jax.nn.silu(g) * u if act == "swiglu" else jax.nn.gelu(g)
+            y, _ = psq.psq_matmul(h, wd, p["w_down_q"], quant)
+            return y
+
+        return jax.vmap(one)(xs, p["w_gate"], p["w_up"], p["w_down"])
+    g = jnp.einsum("ecd,edf->ecf", xs, p["w_gate"])
+    if act == "swiglu":
+        u = jnp.einsum("ecd,edf->ecf", xs, p["w_up"])
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(g)
+    h = constrain(h, "experts", None, "expert_ffn")
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+def _moe_chunk(
+    p: Params, x: jax.Array, n_experts: int, top_k: int,
+    capacity: int, quant: QuantConfig, act: str,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Route one chunk of tokens. x: (T, d) -> (y, aux_loss, me_fraction)."""
+    t, d = x.shape
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (T, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)        # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # Switch-style load balance aux loss
+    me = jnp.mean(probs, axis=0)                             # (E,)
+    ce = jnp.zeros((n_experts,)).at[gate_idx.reshape(-1)].add(
+        jnp.ones((t * top_k,)) / (t * top_k)
+    )
+    aux = n_experts * jnp.sum(me * ce)
+
+    # per-expert token selection: score matrix (E, T) of assigned gates
+    assign = jnp.zeros((t, n_experts), jnp.float32)
+    assign = assign.at[jnp.arange(t)[:, None], gate_idx].set(gate_vals)
+    # pick up to `capacity` highest-gate tokens per expert
+    sel_gate, sel_idx = jax.lax.top_k(assign.T, capacity)    # (E, C)
+    xs = jnp.take(x, sel_idx, axis=0)                        # (E, C, d)
+    xs = xs * (sel_gate > 0.0)[..., None].astype(x.dtype)
+    ys = _expert_ffn(p, xs, quant, act)                      # (E, C, d)
+    ys = ys * sel_gate[..., None].astype(ys.dtype)
+    y = jnp.zeros_like(x).at[sel_idx.reshape(-1)].add(
+        ys.reshape(-1, d), mode="drop"
+    )
+    return y, aux, me
+
+
+def apply_moe_dense(
+    p: Params, x: jax.Array, n_experts: int, top_k: int,
+    quant: QuantConfig, act: str = "swiglu",
+) -> Tuple[jax.Array, Dict]:
+    """Weighted-dense mixture: every expert computed, gated by top-k probs.
+
+    For many-small-expert configs (granite: 40 experts of d_ff=512) the
+    dispatch machinery costs far more than it saves — E/top_k extra
+    expert FLOPs buy the removal of ALL gather/scatter/capacity traffic
+    and turn the expert matmuls into two large TP-sharded einsums
+    (EXPERIMENTS.md §Perf, granite hillclimb).
+    """
+    b, s, d = x.shape
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (B,S,E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+    gates = jnp.zeros_like(probs).at[
+        jnp.arange(b)[:, None, None],
+        jnp.arange(s)[None, :, None],
+        gate_idx,
+    ].set(gate_vals)                                          # (B,S,E) sparse
+
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean((gates > 0).astype(jnp.float32), axis=(0, 1)) * (
+        n_experts / top_k
+    )
+    aux = jnp.sum(me * ce)
+
+    h_g = jnp.einsum("bsd,edf->bsef", x, p["w_gate"].astype(x.dtype))
+    if act == "swiglu":
+        h_u = jnp.einsum("bsd,edf->bsef", x, p["w_up"].astype(x.dtype))
+        h = jax.nn.silu(h_g) * h_u
+    else:
+        h = jax.nn.gelu(h_g)
+    h = constrain(h, "batch", "seq", None, "expert_ffn")
+    y = jnp.einsum(
+        "bsef,efd,bse->bsd", h, p["w_down"].astype(h.dtype),
+        gates.astype(h.dtype),
+    )
+    return constrain(y, "batch", "seq", "embed"), {
+        "moe_aux_loss": aux, "router_me": me,
+    }
+
+
+def apply_moe(
+    p: Params, x: jax.Array, n_experts: int, top_k: int,
+    quant: QuantConfig, act: str = "swiglu",
+    capacity_factor: float = 1.25, chunk_size: int = 4096,
+    impl: str = "dispatch",
+) -> Tuple[jax.Array, Dict]:
+    """x: (B, S, d). Locality-aware top-k routing with capacity dropping.
+
+    Routing groups are formed *within* each batch row (sequence chunks of
+    ``chunk_size``), so under batch->data sharding the gather/scatter of
+    the dispatch never crosses devices — the expert compute itself is
+    either expert-parallel (E % axis == 0) or TP over the expert FFN.
+    (The original token-major chunking resharded the whole activation
+    per chunk; see EXPERIMENTS.md §Perf granite hillclimb.)
+    """
+    if impl == "dense":
+        return apply_moe_dense(p, x, n_experts, top_k, quant, act=act)
+    b, s, d = x.shape
+    chunk = max(1, min(chunk_size, s))
+    n_chunks = math.ceil(s / chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    groups = x.reshape(b * n_chunks, chunk, d)
+    capacity = min(chunk, max(1, int(capacity_factor * chunk * top_k / n_experts)))
+
+    def route(xc):
+        return _moe_chunk(p, xc, n_experts, top_k, capacity, quant, act)
+
+    ys, aux, mes = jax.vmap(route)(groups)
+    y = ys.reshape(b, n_chunks * chunk, d)[:, :s]
+    y = constrain(y, "batch", "seq", "embed")
+    stats = {
+        "moe_aux_loss": jnp.mean(aux),
+        "router_me": jnp.mean(mes, axis=0),
+    }
+    return y, stats

@@ -1,0 +1,227 @@
+"""Mamba2 (SSD) block — used by the zamba2-7b hybrid architecture.
+
+Chunked SSD implementation: within-chunk interactions use the quadratic
+masked form, across-chunk state is carried by a scan — the standard
+parallel training algorithm. A step-wise recurrence (exactly the same
+math) serves decode; tests check scan == chunked == step.
+
+Projections (in/out) are PSQLinear so the HCiM technique covers the SSM
+family too (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import QuantConfig
+from repro.core.psq_linear import apply_linear, init_linear
+from repro.models.layers import apply_rmsnorm, init_rmsnorm
+from repro.parallel.sharding import constrain
+
+Params = Dict
+
+
+class SSMConfig(NamedTuple):
+    d_model: int
+    d_state: int = 64
+    expand: int = 2
+    head_dim: int = 64
+    conv_width: int = 4
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        # conv runs over [x, B, C] as in Mamba2
+        return self.d_inner + 2 * self.d_state
+
+
+def init_mamba2(key: jax.Array, cfg: SSMConfig, quant: QuantConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.d_state + cfg.n_heads
+    p: Params = {
+        "in_proj": init_linear(ks[0], cfg.d_model, d_in_proj, quant),
+        "out_proj": init_linear(ks[1], cfg.d_inner, cfg.d_model, quant),
+        "conv_w": jax.random.normal(ks[2], (cfg.conv_width, cfg.conv_dim)) * 0.2,
+        "conv_b": jnp.zeros((cfg.conv_dim,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, cfg.n_heads)),
+        "D": jnp.ones((cfg.n_heads,)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((cfg.n_heads,), 0.01))),
+        "norm": init_rmsnorm(cfg.d_inner),
+    }
+    return p
+
+
+def _split_proj(z_xbc_dt: jax.Array, cfg: SSMConfig):
+    z, xbc, dt = jnp.split(
+        z_xbc_dt,
+        [cfg.d_inner, cfg.d_inner + cfg.conv_dim],
+        axis=-1,
+    )
+    return z, xbc, dt
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B, S, C); w: (W, C) depthwise causal kernel."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def _ssd_chunked(
+    xh: jax.Array,    # (B, S, H, P) inputs per head
+    dt: jax.Array,    # (B, S, H)   softplus'd step sizes
+    A: jax.Array,     # (H,)        negative decay rates
+    Bm: jax.Array,    # (B, S, N)
+    Cm: jax.Array,    # (B, S, N)
+    chunk: int = 128,
+) -> jax.Array:
+    """Chunked SSD: y_t = C_t h_t, h_t = exp(A dt_t) h_{t-1} + dt_t x_t B_t."""
+    b, s, h, pdim = xh.shape
+    n = Bm.shape[-1]
+    L = min(chunk, s)
+    nc = math.ceil(s / L)
+    pad = nc * L - s
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    # scan over chunks: only one (B, L, L, H) intra-chunk tensor is ever
+    # live (shards over batch x heads), instead of an (B, NC, L, L, H)
+    # monster — this is what keeps the zamba2 train_4k cell compilable.
+    xh = jnp.moveaxis(xh.reshape(b, nc, L, h, pdim), 1, 0)   # (NC,B,L,H,P)
+    dt = jnp.moveaxis(dt.reshape(b, nc, L, h), 1, 0)
+    Bm = jnp.moveaxis(Bm.reshape(b, nc, L, n), 1, 0)
+    Cm = jnp.moveaxis(Cm.reshape(b, nc, L, n), 1, 0)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(hprev, inp):
+        xc, dtc, bc, cc = inp                                # (B,L,...)
+        loga = dtc * A[None, None, :]                        # (B,L,H) <= 0
+        cum = jnp.cumsum(loga, axis=1)
+        rel = cum[:, :, None, :] - cum[:, None, :, :]        # (B,L,L,H)
+        decay = jnp.where(tri[None, :, :, None], jnp.exp(rel), 0.0)
+        cb = jnp.einsum("bln,bmn->blm", cc, bc)
+        y_intra = jnp.einsum(
+            "blm,blmh,bmh,bmhp->blhp", cb, decay, dtc, xc
+        )
+        y_inter = jnp.einsum(
+            "bln,blh,bhnp->blhp", cc, jnp.exp(cum), hprev
+        )
+        last = jnp.exp(cum[:, -1, :])                        # (B,H)
+        rem = jnp.exp(cum[:, -1:, :] - cum)                  # (B,L,H)
+        inc = jnp.einsum("bln,blh,blhp->bhnp", bc, dtc * rem, xc)
+        hnew = hprev * last[:, :, None, None] + inc
+        return hnew, y_intra + y_inter
+
+    h0 = jnp.zeros((b, h, n, pdim), xh.dtype)
+    hfinal, ys = jax.lax.scan(chunk_step, h0, (xh, dt, Bm, Cm))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * L, h, pdim)
+    return y[:, :s], hfinal
+
+
+def apply_mamba2(
+    p: Params, x: jax.Array, cfg: SSMConfig, quant: QuantConfig,
+    chunk: int = 128, return_cache: bool = False,
+):
+    b, s, _ = x.shape
+    zxd, stats = apply_linear(p["in_proj"], x, quant)
+    z, xbc_raw, dtr = _split_proj(zxd, cfg)
+    xbc = _causal_depthwise_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xin, Bm, Cm = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + cfg.d_state], -1)
+    xh = xin.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    xh = constrain(xh, "batch", "seq", "ssm_inner", None)
+    dt = jax.nn.softplus(dtr + p["dt_bias"])                # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                # (H,) < 0
+    y, hfinal = _ssd_chunked(xh, dt, A, Bm, Cm, chunk=chunk)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(b, s, cfg.d_inner)
+    y = apply_rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out, st2 = apply_linear(p["out_proj"], y, quant)
+    stats.update(st2)
+    if return_cache:
+        w = cfg.conv_width - 1
+        tail = jnp.pad(xbc_raw, ((0, 0), (max(w - s, 0), 0), (0, 0)))[:, -w:]
+        return out, stats, {"state": hfinal, "conv": tail}
+    return out, stats
+
+
+# ---------------------------------------------------------------------------
+# Sequential reference + decode step
+# ---------------------------------------------------------------------------
+
+def ssd_sequential_reference(xh, dt, A, Bm, Cm):
+    """Plain per-step recurrence (oracle for the chunked form)."""
+    b, s, h, pdim = xh.shape
+    n = Bm.shape[-1]
+
+    def step(hst, inp):
+        xt, dtt, bt, ct = inp
+        a = jnp.exp(dtt * A)                                # (B,H)
+        inc = jnp.einsum("bn,bh,bhp->bhnp", bt, dtt, xt)
+        hst = hst * a[:, :, None, None] + inc
+        yt = jnp.einsum("bn,bhnp->bhp", ct, hst)
+        return hst, yt
+
+    h0 = jnp.zeros((b, h, n, pdim), xh.dtype)
+    _, ys = jax.lax.scan(
+        step,
+        h0,
+        (
+            jnp.moveaxis(xh, 1, 0),
+            jnp.moveaxis(dt, 1, 0),
+            jnp.moveaxis(Bm, 1, 0),
+            jnp.moveaxis(Cm, 1, 0),
+        ),
+    )
+    return jnp.moveaxis(ys, 0, 1)
+
+
+def init_mamba2_cache(batch: int, cfg: SSMConfig, dtype=jnp.float32) -> Dict:
+    return {
+        "state": jnp.zeros(
+            (batch, cfg.n_heads, cfg.d_state, cfg.head_dim), dtype
+        ),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.conv_dim), dtype),
+    }
+
+
+def decode_mamba2(
+    p: Params, x: jax.Array, cache: Dict, cfg: SSMConfig, quant: QuantConfig
+) -> Tuple[jax.Array, Dict, Dict]:
+    """One-token step. x: (B, 1, d)."""
+    b = x.shape[0]
+    zxd, stats = apply_linear(p["in_proj"], x, quant)
+    z, xbc, dtr = _split_proj(zxd[:, 0], cfg)
+    conv_buf = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)
+    xbc = jnp.einsum("bwc,wc->bc", conv_buf, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(xbc)
+    xin, Bm, Cm = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + cfg.d_state], -1)
+    xh = xin.reshape(b, cfg.n_heads, cfg.head_dim)
+    dt = jax.nn.softplus(dtr + p["dt_bias"])                # (B,H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)
+    inc = jnp.einsum("bn,bh,bhp->bhnp", Bm, dt, xh)
+    state = cache["state"] * a[:, :, None, None] + inc
+    y = jnp.einsum("bn,bhnp->bhp", Cm, state)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b, cfg.d_inner)
+    y = apply_rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out, st2 = apply_linear(p["out_proj"], y[:, None], quant)
+    stats.update(st2)
+    new_cache = {"state": state, "conv": conv_buf[:, 1:]}
+    return out, new_cache, stats

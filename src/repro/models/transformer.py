@@ -1,0 +1,491 @@
+"""Model assembly: scan-over-stacked-layers for every family.
+
+Homogeneous layer stacks are stored as *stacked* parameter pytrees
+(leading dim = #layers) and executed with ``lax.scan`` — compile time is
+O(1) in depth (an 81-layer zamba2 compiles as fast as a 3-layer one) and
+activation rematerialization wraps the scan body. This is the standard
+production layout (MaxText et al.).
+
+Families
+--------
+dense/vlm — scan over identical GQA blocks (vlm prepends stub patches).
+moe       — scan over attention+MoE blocks (arctic adds dense residual).
+hybrid    — zamba2: scan over supersteps of (attn_every-1) Mamba2 blocks
+            followed by ONE SHARED attention+MLP block (weight sharing),
+            plus a tail of Mamba2 blocks.
+ssm       — xLSTM: supersteps of (slstm_every-1) mLSTM + 1 sLSTM.
+encdec    — whisper backbone: encoder scan + decoder scan w/ cross attn.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.attention import AttnConfig
+from repro.parallel.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# config helpers
+# ---------------------------------------------------------------------------
+
+def attn_config(cfg: ArchConfig, causal: bool = True) -> AttnConfig:
+    return AttnConfig(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        qk_norm=cfg.qk_norm,
+        sliding_window=cfg.sliding_window,
+        rope_theta=cfg.rope_theta,
+        use_bias=cfg.attn_bias,
+        causal=causal,
+        impl=cfg.attn_impl,
+    )
+
+
+def ssm_config(cfg: ArchConfig) -> ssm_mod.SSMConfig:
+    return ssm_mod.SSMConfig(
+        d_model=cfg.d_model, d_state=cfg.ssm_state,
+        expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+    )
+
+
+def xlstm_config(cfg: ArchConfig) -> xlstm_mod.XLSTMConfig:
+    return xlstm_mod.XLSTMConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads,
+        proj_factor=cfg.xlstm_proj_factor,
+    )
+
+
+def layer_kinds(cfg: ArchConfig) -> List[str]:
+    kinds = []
+    for i in range(cfg.n_layers):
+        if cfg.family == "hybrid":
+            kinds.append("shared_attn" if (i + 1) % cfg.attn_every == 0 else "mamba")
+        elif cfg.family == "ssm":
+            kinds.append(
+                "slstm" if cfg.slstm_every and (i + 1) % cfg.slstm_every == 0
+                else "mlstm"
+            )
+        elif cfg.family == "moe":
+            kinds.append("moe")
+        else:
+            kinds.append("attn")
+    return kinds
+
+
+def stack_plan(cfg: ArchConfig) -> Dict[str, int]:
+    """How many layers live in each stacked group."""
+    if cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        tail = cfg.n_layers % cfg.attn_every
+        return {"groups": groups, "per_group": cfg.attn_every - 1, "tail": tail}
+    if cfg.family == "ssm" and cfg.slstm_every:
+        groups = cfg.n_layers // cfg.slstm_every
+        tail = cfg.n_layers % cfg.slstm_every
+        return {"groups": groups, "per_group": cfg.slstm_every - 1, "tail": tail}
+    return {"groups": cfg.n_layers, "per_group": 1, "tail": 0}
+
+
+# ---------------------------------------------------------------------------
+# per-kind single blocks (init + forward)
+# ---------------------------------------------------------------------------
+
+def _init_attn_block(key, cfg: ArchConfig, cross: bool = False,
+                     causal: bool = True) -> Params:
+    ks = jax.random.split(key, 4)
+    q = cfg.quant
+    d = cfg.d_model
+    p: Params = {
+        "norm1": L.init_norm(cfg.norm_type, d),
+        "attn": attn_mod.init_attention(ks[0], attn_config(cfg, causal), q),
+        "norm2": L.init_norm(cfg.norm_type, d),
+        "mlp": L.init_mlp(ks[1], d, cfg.d_ff, cfg.act, q, use_bias=cfg.attn_bias),
+    }
+    if cross:
+        p["norm_cross"] = L.init_norm(cfg.norm_type, d)
+        p["cross"] = attn_mod.init_attention(ks[2], attn_config(cfg), q)
+    return p
+
+
+def _init_moe_block(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    q = cfg.quant
+    d = cfg.d_model
+    e_ff = cfg.moe_d_ff or cfg.d_ff
+    p: Params = {
+        "norm1": L.init_norm(cfg.norm_type, d),
+        "attn": attn_mod.init_attention(ks[0], attn_config(cfg), q),
+        "norm2": L.init_norm(cfg.norm_type, d),
+        "moe": moe_mod.init_moe(ks[1], d, e_ff, cfg.n_experts, cfg.moe_top_k,
+                                q, act=cfg.act),
+    }
+    if cfg.dense_residual:
+        p["mlp"] = L.init_mlp(ks[2], d, cfg.d_ff, cfg.act, q)
+    return p
+
+
+def _init_mamba_block(key, cfg: ArchConfig) -> Params:
+    return {
+        "norm1": L.init_norm(cfg.norm_type, cfg.d_model),
+        "mamba": ssm_mod.init_mamba2(key, ssm_config(cfg), cfg.quant),
+    }
+
+
+def _init_mlstm_block(key, cfg: ArchConfig) -> Params:
+    return {
+        "norm1": L.init_norm(cfg.norm_type, cfg.d_model),
+        "mlstm": xlstm_mod.init_mlstm(key, xlstm_config(cfg), cfg.quant),
+    }
+
+
+def _init_slstm_block(key, cfg: ArchConfig) -> Params:
+    return {
+        "norm1": L.init_norm(cfg.norm_type, cfg.d_model),
+        "slstm": xlstm_mod.init_slstm(key, xlstm_config(cfg), cfg.quant),
+    }
+
+
+def _stacked(init_fn: Callable, key, n: int) -> Params:
+    """vmap the per-block init over n split keys -> stacked param tree."""
+    if n == 0:
+        return None
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+# block forwards ------------------------------------------------------------
+
+def _merge_stats(agg: Dict, st: Dict):
+    for k, v in st.items():
+        if k in ("moe_aux_loss",):
+            agg[k] = agg.get(k, 0.0) + v
+        elif k == "p_zero_frac":
+            agg["_pz_sum"] = agg.get("_pz_sum", 0.0) + v
+            agg["_pz_n"] = agg.get("_pz_n", 0) + 1
+        else:
+            agg[k] = v
+
+
+def _attn_block_fwd(lp: Params, x, cfg: ArchConfig,
+                    enc_out=None, causal: bool = True) -> Tuple[jax.Array, Dict]:
+    q = cfg.quant
+    stats: Dict = {}
+    h, st = attn_mod.apply_attention(
+        lp["attn"], L.apply_norm(cfg.norm_type, lp["norm1"], x),
+        attn_config(cfg, causal), q,
+    )
+    _merge_stats(stats, st)
+    x = x + h
+    if "cross" in lp and enc_out is not None:
+        h, st = attn_mod.apply_attention(
+            lp["cross"], L.apply_norm(cfg.norm_type, lp["norm_cross"], x),
+            attn_config(cfg), q, xkv=enc_out,
+        )
+        _merge_stats(stats, st)
+        x = x + h
+    h, st = L.apply_mlp(
+        lp["mlp"], L.apply_norm(cfg.norm_type, lp["norm2"], x), cfg.act, q
+    )
+    _merge_stats(stats, st)
+    return constrain(x + h, "batch", "seq", "embed"), stats
+
+
+def _moe_block_fwd(lp: Params, x, cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    q = cfg.quant
+    stats: Dict = {}
+    h, st = attn_mod.apply_attention(
+        lp["attn"], L.apply_norm(cfg.norm_type, lp["norm1"], x),
+        attn_config(cfg), q,
+    )
+    _merge_stats(stats, st)
+    x = x + h
+    z = L.apply_norm(cfg.norm_type, lp["norm2"], x)
+    h, st = moe_mod.apply_moe(
+        lp["moe"], z, cfg.n_experts, cfg.moe_top_k, q,
+        act=cfg.act, chunk_size=cfg.moe_chunk, impl=cfg.moe_impl,
+    )
+    _merge_stats(stats, st)
+    if cfg.dense_residual:
+        h2, st2 = L.apply_mlp(lp["mlp"], z, cfg.act, q)
+        _merge_stats(stats, st2)
+        h = h + h2
+    return constrain(x + h, "batch", "seq", "embed"), stats
+
+
+def _mamba_block_fwd(lp: Params, x, cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    h, st = ssm_mod.apply_mamba2(
+        lp["mamba"], L.apply_norm(cfg.norm_type, lp["norm1"], x),
+        ssm_config(cfg), cfg.quant,
+    )
+    return constrain(x + h, "batch", "seq", "embed"), st
+
+
+def _mlstm_block_fwd(lp: Params, x, cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    h, st = xlstm_mod.apply_mlstm(
+        lp["mlstm"], L.apply_norm(cfg.norm_type, lp["norm1"], x),
+        xlstm_config(cfg), cfg.quant,
+    )
+    return constrain(x + h, "batch", "seq", "embed"), st
+
+
+def _slstm_block_fwd(lp: Params, x, cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    h, st = xlstm_mod.apply_slstm(
+        lp["slstm"], L.apply_norm(cfg.norm_type, lp["norm1"], x),
+        xlstm_config(cfg), cfg.quant,
+    )
+    return constrain(x + h, "batch", "seq", "embed"), st
+
+
+def _shared_attn_fwd(params: Params, x, cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    q = cfg.quant
+    stats: Dict = {}
+    h, st = attn_mod.apply_attention(
+        params["shared_attn"],
+        L.apply_norm(cfg.norm_type, params["shared_norm"], x),
+        attn_config(cfg), q,
+    )
+    _merge_stats(stats, st)
+    x = x + h
+    h, st = L.apply_mlp(
+        params["shared_mlp"],
+        L.apply_norm(cfg.norm_type, params["shared_mlp_norm"], x),
+        cfg.act, q,
+    )
+    _merge_stats(stats, st)
+    return constrain(x + h, "batch", "seq", "embed"), stats
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_model(key: jax.Array, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    params: Params = {
+        "embed": L.init_embedding(ks[0], cfg.vocab_size, cfg.d_model),
+        "final_norm": L.init_norm(cfg.norm_type, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_lm_head(ks[1], cfg.d_model, cfg.vocab_size)
+
+    plan = stack_plan(cfg)
+    if cfg.family in ("dense", "vlm"):
+        params["blocks"] = _stacked(
+            lambda k: _init_attn_block(k, cfg), ks[2], cfg.n_layers
+        )
+    elif cfg.family == "moe":
+        params["blocks"] = _stacked(
+            lambda k: _init_moe_block(k, cfg), ks[2], cfg.n_layers
+        )
+    elif cfg.family == "hybrid":
+        n_mamba_grouped = plan["groups"] * plan["per_group"]
+        params["mamba_groups"] = _stacked(
+            lambda k: _init_mamba_block(k, cfg), ks[2], n_mamba_grouped
+        )
+        params["mamba_tail"] = _stacked(
+            lambda k: _init_mamba_block(k, cfg), ks[3], plan["tail"]
+        )
+        sk = jax.random.split(ks[4], 2)
+        params["shared_attn"] = attn_mod.init_attention(
+            sk[0], attn_config(cfg), cfg.quant
+        )
+        params["shared_norm"] = L.init_norm(cfg.norm_type, cfg.d_model)
+        params["shared_mlp_norm"] = L.init_norm(cfg.norm_type, cfg.d_model)
+        params["shared_mlp"] = L.init_mlp(
+            sk[1], cfg.d_model, cfg.d_ff, cfg.act, cfg.quant
+        )
+    elif cfg.family == "ssm":
+        params["mlstm_groups"] = _stacked(
+            lambda k: _init_mlstm_block(k, cfg), ks[2],
+            plan["groups"] * plan["per_group"],
+        )
+        params["slstm_blocks"] = _stacked(
+            lambda k: _init_slstm_block(k, cfg), ks[3], plan["groups"]
+        )
+        params["mlstm_tail"] = _stacked(
+            lambda k: _init_mlstm_block(k, cfg), ks[4], plan["tail"]
+        )
+    elif cfg.family == "encdec":
+        params["encoder"] = {
+            "layers": _stacked(
+                lambda k: _init_attn_block(k, cfg, causal=False),
+                ks[2], cfg.n_enc_layers,
+            ),
+            "final_norm": L.init_norm(cfg.norm_type, cfg.d_model),
+        }
+        params["blocks"] = _stacked(
+            lambda k: _init_attn_block(k, cfg, cross=True), ks[3], cfg.n_layers
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _scan_blocks(
+    stacked: Params, x: jax.Array, body: Callable, cfg: ArchConfig,
+    stats: Dict,
+):
+    """lax.scan x -> body(layer_params, x) over the stacked leading dim."""
+    if stacked is None:
+        return x
+
+    def one(carry, lp):
+        x, aux, pz, pzn = carry
+        if cfg.remat == "block":
+            x2, st = jax.checkpoint(
+                lambda p_, x_: body(p_, x_, cfg)
+            )(lp, x)
+        else:
+            x2, st = body(lp, x, cfg)
+        aux = aux + st.get("moe_aux_loss", 0.0)
+        pz = pz + st.get("_pz_sum", st.get("p_zero_frac", 0.0))
+        pzn = pzn + st.get("_pz_n", 1.0 if "p_zero_frac" in st else 0.0)
+        return (x2, aux, pz, pzn), None
+
+    (x, aux, pz, pzn), _ = jax.lax.scan(
+        one, (x, jnp.zeros(()), jnp.zeros(()), jnp.zeros(())), stacked
+    )
+    stats["moe_aux_loss"] = stats.get("moe_aux_loss", 0.0) + aux
+    stats["_pz_sum"] = stats.get("_pz_sum", 0.0) + pz
+    stats["_pz_n"] = stats.get("_pz_n", 0.0) + pzn
+    return x
+
+
+def encode(params: Params, cfg: ArchConfig, enc_embeds: jax.Array,
+           stats: Optional[Dict] = None) -> jax.Array:
+    stats = {} if stats is None else stats
+    x = constrain(enc_embeds, "batch", "seq", "embed")
+    x = _scan_blocks(
+        params["encoder"]["layers"], x,
+        lambda lp, x_, c: _attn_block_fwd(lp, x_, c, causal=False),
+        cfg, stats,
+    )
+    return L.apply_norm(cfg.norm_type, params["encoder"]["final_norm"], x)
+
+
+def backbone(params: Params, cfg: ArchConfig, x: jax.Array,
+             enc_out: Optional[jax.Array], stats: Dict) -> jax.Array:
+    plan = stack_plan(cfg)
+    if cfg.family in ("dense", "vlm"):
+        x = _scan_blocks(params["blocks"], x, _attn_block_fwd, cfg, stats)
+    elif cfg.family == "moe":
+        x = _scan_blocks(params["blocks"], x, _moe_block_fwd, cfg, stats)
+    elif cfg.family == "encdec":
+        x = _scan_blocks(
+            params["blocks"], x,
+            lambda lp, x_, c: _attn_block_fwd(lp, x_, c, enc_out=enc_out),
+            cfg, stats,
+        )
+    elif cfg.family == "hybrid":
+        g, pg = plan["groups"], plan["per_group"]
+        if g > 0:
+            grouped = jax.tree.map(
+                lambda a: a.reshape(g, pg, *a.shape[1:]),
+                params["mamba_groups"],
+            )
+
+            def superstep(carry, gp):
+                x_, aux = carry
+                st_: Dict = {}
+                x_ = _scan_blocks(
+                    gp, x_, _mamba_block_fwd,
+                    dataclasses.replace(cfg, n_layers=pg), st_,
+                )
+                x_, st2 = _shared_attn_fwd(params, x_, cfg)
+                return (x_, aux + st_.get("_pz_sum", 0.0)), None
+
+            (x, _), _ = jax.lax.scan(superstep, (x, jnp.zeros(())), grouped)
+        x = _scan_blocks(params["mamba_tail"], x, _mamba_block_fwd, cfg, stats)
+    elif cfg.family == "ssm":
+        g, pg = plan["groups"], plan["per_group"]
+        if g > 0:
+            grouped = jax.tree.map(
+                lambda a: a.reshape(g, pg, *a.shape[1:]),
+                params["mlstm_groups"],
+            )
+
+            def superstep(carry, inp):
+                gp, sp = inp
+                x_, = carry
+                st_: Dict = {}
+                x_ = _scan_blocks(
+                    gp, x_, _mlstm_block_fwd,
+                    dataclasses.replace(cfg, n_layers=pg), st_,
+                )
+                x_, _ = _slstm_block_fwd(sp, x_, cfg)
+                return (x_,), None
+
+            (x,), _ = jax.lax.scan(
+                superstep, (x,), (grouped, params["slstm_blocks"])
+            )
+        x = _scan_blocks(params["mlstm_tail"], x, _mlstm_block_fwd, cfg, stats)
+    return x
+
+
+def forward(
+    params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+    last_only: bool = False,
+) -> Tuple[jax.Array, Dict]:
+    """Training / prefill forward -> (logits, stats).
+
+    ``last_only=True`` applies the LM head to the final position only
+    (serving prefill — avoids materializing S x vocab logits).
+    """
+    stats: Dict = {}
+    x = L.apply_embedding(params["embed"], batch["tokens"])
+    if cfg.compute_dtype == "bf16":
+        x = x.astype(jnp.bfloat16)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = encode(params, cfg, batch["enc_embeds"].astype(x.dtype), stats)
+    x = backbone(params, cfg, x, enc_out, stats)
+    x = L.apply_norm(cfg.norm_type, params["final_norm"], x)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        x = x[:, batch["patch_embeds"].shape[1]:]
+    if last_only:
+        x = x[:, -1:]
+    logits = L.apply_lm_head(params["embed"], x, params.get("lm_head"))
+    logits = constrain(logits, "batch", "seq", "vocab")
+    # static gate: presence of the sparsity stat must not depend on traced
+    # values (forward runs under jit)
+    if cfg.quant.collect_stats and cfg.quant.mode == "psq":
+        stats["p_zero_frac"] = stats.pop("_pz_sum") / jnp.maximum(
+            stats.pop("_pz_n", 1.0), 1.0
+        )
+    else:
+        stats.pop("_pz_sum", None)
+        stats.pop("_pz_n", None)
+    return logits, stats
+
+
+def loss_fn(
+    params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict]:
+    logits, stats = forward(params, cfg, batch)
+    tgt = batch["targets"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask", jnp.ones_like(tgt, jnp.float32))
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    aux = stats.get("moe_aux_loss")
+    if aux is not None and cfg.family == "moe":
+        loss = loss + 0.01 * aux
+    stats["ce_loss"] = loss
+    return loss, stats

@@ -1,0 +1,340 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517) for the xlstm-350m arch.
+
+mLSTM: matrix-memory LSTM with exponential gating. Training/prefill uses
+the stabilized parallel (quadratic-masked) formulation; decode uses the
+O(1)-per-step recurrence on a (d_k, d_v) state — tests assert the two
+agree. sLSTM: scalar-memory recurrent cell with per-head block-diagonal
+recurrence, evaluated with lax.scan.
+
+All projections are PSQLinear (HCiM applies to the whole block).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import QuantConfig
+from repro.core.psq_linear import apply_linear, init_linear
+from repro.models.layers import apply_rmsnorm, init_rmsnorm
+from repro.parallel.sharding import constrain
+
+Params = Dict
+
+
+class XLSTMConfig(NamedTuple):
+    d_model: int
+    n_heads: int = 4
+    proj_factor: float = 2.0      # mLSTM inner expansion
+    conv_width: int = 4
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.proj_factor * self.d_model)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key: jax.Array, cfg: XLSTMConfig, quant: QuantConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    d, di = cfg.d_model, cfg.d_inner
+    h, hd = cfg.n_heads, cfg.head_dim
+    std = 1.0 / math.sqrt(hd)
+    return {
+        "up_proj": init_linear(ks[0], d, 2 * di, quant),
+        # q/k/v are block-diagonal per head (xLSTM's head-wise projections
+        # — this is what puts the 24L/d1024 config at ~350M params)
+        "wq": jax.random.normal(ks[1], (h, hd, hd)) * std,
+        "wk": jax.random.normal(ks[2], (h, hd, hd)) * std,
+        "wv": jax.random.normal(ks[3], (h, hd, hd)) * std,
+        "w_if": init_linear(ks[4], di, 2 * cfg.n_heads, quant),
+        "conv_w": jax.random.normal(ks[5], (cfg.conv_width, di)) * 0.2,
+        "conv_b": jnp.zeros((di,)),
+        "out_norm": init_rmsnorm(di),
+        "down_proj": init_linear(ks[6], di, d, quant),
+    }
+
+
+def _head_proj(x_heads: jax.Array, w: jax.Array) -> jax.Array:
+    """Block-diagonal projection: (..., H, Dh) x (H, Dh, Dh)."""
+    return jnp.einsum("...hd,hde->...he", x_heads, w)
+
+
+def _causal_conv(x, w, b):
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def _mlstm_parallel(q, k, v, i_pre, f_pre):
+    """Stabilized parallel mLSTM (Beck et al. eq. 19-27).
+
+    q,k,v: (B, S, H, D); i_pre/f_pre: (B, S, H) pre-activation gates.
+    """
+    b, s, h, d = q.shape
+    logf = jax.nn.log_sigmoid(f_pre)                    # (B,S,H)
+    cums = jnp.cumsum(logf, axis=1)
+    # D~[t, s'] = cumlogf_t - cumlogf_s' + i_s'  for s' <= t
+    dmat = cums[:, :, None, :] - cums[:, None, :, :] + i_pre[:, None, :, :]
+    tri = jnp.tril(jnp.ones((s, s), bool))
+    dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2, keepdims=True)            # (B,S,1,H) stabilizer
+    dexp = jnp.exp(dmat - m)
+    scores = jnp.einsum("bshd,bthd->bsth", q, k) / math.sqrt(d)
+    w = scores * dexp                                   # (B,S,S,H)
+    norm = jnp.maximum(
+        jnp.abs(jnp.sum(w, axis=2)), jnp.exp(-m[:, :, 0, :])
+    )                                                   # (B,S,H)
+    y = jnp.einsum("bsth,bthd->bshd", w, v) / norm[..., None]
+    return y
+
+
+def _mlstm_chunked(q, k, v, i_pre, f_pre, chunk: int = 128):
+    """Chunk-scanned stabilized mLSTM == the parallel form (tested).
+
+    Only an (B, L, L, H) intra-chunk tensor is live at a time, so the
+    train_4k cell stays compilable; the carried (C, n, m) state is the
+    same triple the decode recurrence uses.
+    """
+    b, s, h, d = q.shape
+    L = min(chunk, s)
+    nc = math.ceil(s / L)
+    pad = nc * L - s
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (q, k, v))
+        i_pre = jnp.pad(i_pre, ((0, 0), (0, pad), (0, 0)))
+        # padded steps must not erase state: forget-gate pre-act -> +inf
+        f_pre = jnp.pad(f_pre, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=30.0)
+    split = lambda t: jnp.moveaxis(
+        t.reshape(b, nc, L, *t.shape[2:]), 1, 0
+    )
+    qc, kc, vc, ic, fc = map(split, (q, k, v, i_pre, f_pre))
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    def step(carry, inp):
+        C, n, m = carry                                  # (B,H,D,D),(B,H,D),(B,H)
+        qt, kt, vt, it, ft = inp                         # (B,L,...)
+        logf = jax.nn.log_sigmoid(ft)                    # (B,L,H)
+        bcum = jnp.cumsum(logf, axis=1)
+        # intra-chunk log weights
+        dmat = bcum[:, :, None, :] - bcum[:, None, :, :] + it[:, None, :, :]
+        dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+        m_intra = jnp.max(dmat, axis=2)                  # (B,L,H)
+        m_inter = bcum + m[:, None, :]                   # old-state branch
+        m_t = jnp.maximum(m_intra, m_inter)              # (B,L,H)
+        dexp = jnp.exp(dmat - m_t[:, :, None, :])
+        scores = jnp.einsum("blhd,bmhd->blmh", qt, kt) / math.sqrt(d)
+        w = scores * dexp                                # (B,L,L,H)
+        inter_scale = jnp.exp(m_inter - m_t)             # (B,L,H)
+        num = jnp.einsum("blmh,bmhd->blhd", w, vt) + inter_scale[
+            ..., None
+        ] * jnp.einsum("blhd,bhdv->blhv", qt, C)
+        den_intra = jnp.sum(w, axis=2)                   # (B,L,H)
+        den_inter = inter_scale * jnp.einsum("blhd,bhd->blh", qt, n)
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_t))
+        y = num / den[..., None]
+        # carry update (composed decode steps over the chunk)
+        m_state = jnp.maximum(
+            bcum[:, -1, :] + m,
+            jnp.max(bcum[:, -1:, :] - bcum + it, axis=1),
+        )
+        dec_old = jnp.exp(bcum[:, -1, :] + m - m_state)  # (B,H)
+        wk = jnp.exp(bcum[:, -1:, :] - bcum + it - m_state[:, None, :])
+        kt_s = kt / math.sqrt(d)
+        C_new = C * dec_old[..., None, None] + jnp.einsum(
+            "blh,blhd,blhv->bhdv", wk, kt_s, vt
+        )
+        n_new = n * dec_old[..., None] + jnp.einsum("blh,blhd->bhd", wk, kt_s)
+        return (C_new, n_new, m_state), y
+
+    C0 = jnp.zeros((b, h, d, d), q.dtype)
+    n0 = jnp.zeros((b, h, d), q.dtype)
+    m0 = jnp.full((b, h), -1e9, q.dtype)
+    carry, ys = jax.lax.scan(step, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * L, h, d)
+    return y[:, :s], carry
+
+
+def apply_mlstm(
+    p: Params, x: jax.Array, cfg: XLSTMConfig, quant: QuantConfig,
+    chunk: int = 128, return_cache: bool = False,
+):
+    b, s, _ = x.shape
+    up, stats = apply_linear(p["up_proj"], x, quant)
+    xm, z = jnp.split(up, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xm, p["conv_w"], p["conv_b"]))
+    hshape = (b, s, cfg.n_heads, cfg.head_dim)
+    q = _head_proj(xc.reshape(hshape), p["wq"])
+    k = _head_proj(xc.reshape(hshape), p["wk"])
+    v = _head_proj(xm.reshape(hshape), p["wv"])
+    gates, _ = apply_linear(p["w_if"], xc, quant)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)         # (B,S,H)
+    y, (C, n, m) = _mlstm_chunked(q, k, v, i_pre, f_pre, chunk=chunk)
+    y = y.reshape(b, s, cfg.d_inner)
+    y = apply_rmsnorm(p["out_norm"], y) * jax.nn.silu(z)
+    y = constrain(y, "batch", "seq", "ssm_inner")
+    out, st = apply_linear(p["down_proj"], y, quant)
+    stats.update(st)
+    if return_cache:
+        w = cfg.conv_width - 1
+        tail = jnp.pad(xm, ((0, 0), (max(w - s, 0), 0), (0, 0)))[:, -w:]
+        return out, stats, {"C": C, "n": n, "m": m, "conv": tail}
+    return out, stats
+
+
+def init_mlstm_cache(batch: int, cfg: XLSTMConfig, dtype=jnp.float32) -> Dict:
+    h, d = cfg.n_heads, cfg.head_dim
+    return {
+        "C": jnp.zeros((batch, h, d, d), dtype),    # matrix memory (k ⊗ v)
+        "n": jnp.zeros((batch, h, d), dtype),
+        "m": jnp.full((batch, h), -1e9, dtype),     # log-space stabilizer
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), dtype),
+    }
+
+
+def decode_mlstm(
+    p: Params, x: jax.Array, cache: Dict, cfg: XLSTMConfig, quant: QuantConfig
+) -> Tuple[jax.Array, Dict, Dict]:
+    """One-token recurrent step; math identical to the parallel form."""
+    b = x.shape[0]
+    up, stats = apply_linear(p["up_proj"], x, quant)
+    xm, z = jnp.split(up[:, 0], 2, axis=-1)
+    conv_buf = jnp.concatenate([cache["conv"], xm[:, None]], axis=1)
+    xc = jnp.einsum("bwc,wc->bc", conv_buf, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    h, d = cfg.n_heads, cfg.head_dim
+    qh = _head_proj(xc.reshape(b, h, d), p["wq"])
+    kh = _head_proj(xc.reshape(b, h, d), p["wk"])
+    vh = _head_proj(xm.reshape(b, h, d), p["wv"])
+    gates, _ = apply_linear(p["w_if"], xc, quant)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)         # (B,H)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + cache["m"], i_pre)
+    fw = jnp.exp(logf + cache["m"] - m_new)             # (B,H)
+    iw = jnp.exp(i_pre - m_new)
+    kh_s = kh / math.sqrt(d)
+    C = cache["C"] * fw[..., None, None] + iw[..., None, None] * (
+        kh_s[..., :, None] * vh[..., None, :]
+    )
+    n = cache["n"] * fw[..., None] + iw[..., None] * kh_s
+    num = jnp.einsum("bhd,bhdv->bhv", qh, C)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", qh, n)), jnp.exp(-m_new)
+    )
+    y = (num / den[..., None]).reshape(b, cfg.d_inner)
+    y = apply_rmsnorm(p["out_norm"], y) * jax.nn.silu(z)
+    out, st = apply_linear(p["down_proj"], y[:, None], quant)
+    stats.update(st)
+    new_cache = {"C": C, "n": n, "m": m_new, "conv": conv_buf[:, 1:]}
+    return out, new_cache, stats
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key: jax.Array, cfg: XLSTMConfig, quant: QuantConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    return {
+        # input projections for the 4 gates (z, i, f, o)
+        "w_in": init_linear(ks[0], d, 4 * d, quant),
+        # block-diagonal recurrent kernel per head per gate
+        "r": jax.random.normal(ks[1], (4, h, hd, hd)) * (1.0 / math.sqrt(hd)),
+        "bias": jnp.zeros((4, d)),
+        "out_norm": init_rmsnorm(d),
+    }
+
+
+def apply_slstm(
+    p: Params, x: jax.Array, cfg: XLSTMConfig, quant: QuantConfig,
+    return_cache: bool = False,
+):
+    """Sequential sLSTM over time (lax.scan)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    zin, stats = apply_linear(p["w_in"], x, quant)
+    zin = zin.reshape(b, s, 4, d) + p["bias"]
+
+    def step(carry, inp):
+        c, n, m, hprev = carry                          # (B,d)/(B,d)/(B,h)/(B,d)
+        pre = inp                                       # (B,4,d)
+        hh = hprev.reshape(b, h, hd)
+        rec = jnp.einsum("ghij,bhj->gbhi", p["r"], hh).reshape(4, b, d)
+        zt = jnp.tanh(pre[:, 0] + rec[0])
+        i_pre = (pre[:, 1] + rec[1]).reshape(b, h, hd).mean(-1)   # per head
+        f_pre = (pre[:, 2] + rec[2]).reshape(b, h, hd).mean(-1)
+        ot = jax.nn.sigmoid(pre[:, 3] + rec[3])
+        logf = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(logf + m, i_pre)
+        fw = jnp.exp(logf + m - m_new)[..., None]       # (B,h,1)
+        iw = jnp.exp(i_pre - m_new)[..., None]
+        ch = c.reshape(b, h, hd) * fw + iw * zt.reshape(b, h, hd)
+        nh = n.reshape(b, h, hd) * fw + iw
+        hnew = ot * (ch / jnp.maximum(jnp.abs(nh), 1.0)).reshape(b, d)
+        return (ch.reshape(b, d), nh.reshape(b, d), m_new, hnew), hnew
+
+    init = (
+        jnp.zeros((b, d)), jnp.zeros((b, d)),
+        jnp.full((b, h), -1e9), jnp.zeros((b, d)),
+    )
+    carry, ys = jax.lax.scan(step, init, jnp.moveaxis(zin, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1)
+    out = apply_rmsnorm(p["out_norm"], y)
+    if return_cache:
+        c, n, m, hprev = carry
+        return out, stats, {"c": c, "n": n, "m": m, "h": hprev}
+    return out, stats
+
+
+def init_slstm_cache(batch: int, cfg: XLSTMConfig, dtype=jnp.float32) -> Dict:
+    d, h = cfg.d_model, cfg.n_heads
+    return {
+        "c": jnp.zeros((batch, d), dtype),
+        "n": jnp.zeros((batch, d), dtype),
+        "m": jnp.full((batch, h), -1e9, dtype),
+        "h": jnp.zeros((batch, d), dtype),
+    }
+
+
+def decode_slstm(
+    p: Params, x: jax.Array, cache: Dict, cfg: XLSTMConfig, quant: QuantConfig
+) -> Tuple[jax.Array, Dict, Dict]:
+    b, _, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    zin, stats = apply_linear(p["w_in"], x, quant)
+    pre = zin.reshape(b, 4, d) + p["bias"]
+    hh = cache["h"].reshape(b, h, hd)
+    rec = jnp.einsum("ghij,bhj->gbhi", p["r"], hh).reshape(4, b, d)
+    zt = jnp.tanh(pre[:, 0] + rec[0])
+    i_pre = (pre[:, 1] + rec[1]).reshape(b, h, hd).mean(-1)
+    f_pre = (pre[:, 2] + rec[2]).reshape(b, h, hd).mean(-1)
+    ot = jax.nn.sigmoid(pre[:, 3] + rec[3])
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + cache["m"], i_pre)
+    fw = jnp.exp(logf + cache["m"] - m_new)[..., None]
+    iw = jnp.exp(i_pre - m_new)[..., None]
+    ch = cache["c"].reshape(b, h, hd) * fw + iw * zt.reshape(b, h, hd)
+    nh = cache["n"].reshape(b, h, hd) * fw + iw
+    hnew = ot * (ch / jnp.maximum(jnp.abs(nh), 1.0)).reshape(b, d)
+    y = apply_rmsnorm(p["out_norm"], hnew)
+    new_cache = {
+        "c": ch.reshape(b, d), "n": nh.reshape(b, d), "m": m_new, "h": hnew
+    }
+    return y[:, None], new_cache, stats

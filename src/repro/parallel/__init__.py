@@ -1,0 +1,4 @@
+"""Distribution: logical-axis sharding rules + collective helpers."""
+from repro.parallel.sharding import (
+    RULES_2D, RULES_3D, axis_rules, constrain, logical_to_pspec,
+)

@@ -1,0 +1,122 @@
+"""Logical-axis sharding: one rules table instead of per-arch pjit specs.
+
+Model code annotates activations with *logical* axis names
+(``constrain(x, "batch", "seq", "embed")``); the launcher activates a
+rules table mapping logical names to mesh axes. With no rules active
+(unit tests, single CPU) every annotation is a no-op, so the same model
+code runs everywhere.
+
+Divisibility-aware: a rule only applies if the dimension divides by the
+mesh-axis size — otherwise the dimension is left unsharded rather than
+relying on implicit padding (keeps the compiled collectives clean; the
+few non-divisible cases — e.g. 24 heads on a 16-way model axis — fall
+back to the feature-dim sharding of the surrounding projections).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[str, Tuple[str, ...], None]
+
+# logical axis -> mesh axis (or tuple of axes) tables
+RULES_2D: Dict[str, MeshAxes] = {
+    "batch": "data",
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "qkv_features": "model",
+    "ffn": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_ffn": "model",
+    "ssm_inner": "model",
+    "kv_seq": None,        # decode KV cache sequence dim
+    "long_kv_seq": "data",  # 500k-context decode: cache sharded over data
+    "sf_out": "model",     # PSQ scale-factor column dim (follows weight out)
+    "ktiles": None,
+}
+
+RULES_3D: Dict[str, MeshAxes] = dict(RULES_2D, batch=("pod", "data"))
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.rules: Optional[Dict[str, MeshAxes]] = None
+        self.mesh: Optional[Mesh] = None
+
+
+_STATE = _State()
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Dict[str, MeshAxes], mesh: Optional[Mesh] = None):
+    prev = (_STATE.rules, _STATE.mesh)
+    _STATE.rules, _STATE.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _STATE.rules, _STATE.mesh = prev
+
+
+def active_rules() -> Optional[Dict[str, MeshAxes]]:
+    return _STATE.rules
+
+
+def _axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def logical_to_pspec(
+    logical: Sequence[Optional[str]],
+    shape: Optional[Sequence[int]] = None,
+    rules: Optional[Dict[str, MeshAxes]] = None,
+    mesh: Optional[Mesh] = None,
+) -> P:
+    """Map logical axis names to a PartitionSpec under the active rules."""
+    rules = rules if rules is not None else _STATE.rules
+    mesh = mesh if mesh is not None else _STATE.mesh
+    if rules is None:
+        return P()
+    spec = []
+    used = set()
+    for i, name in enumerate(logical):
+        ax = rules.get(name) if name is not None else None
+        if ax is not None and mesh is not None and shape is not None:
+            if shape[i] % _axis_size(mesh, ax) != 0:
+                ax = None  # divisibility guard
+        if ax is not None:
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            if any(a in used for a in axes):
+                ax = None  # each mesh axis shards at most one dim
+            else:
+                used.update(axes)
+        spec.append(ax)
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Apply a logical sharding constraint (no-op without active rules)."""
+    if _STATE.rules is None:
+        return x
+    spec = logical_to_pspec(logical, shape=x.shape)
+    if _STATE.mesh is not None:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(_STATE.mesh, spec)
+        )
+    return jax.lax.with_sharding_constraint(x, spec)

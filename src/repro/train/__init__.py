@@ -1,0 +1,10 @@
+"""Training substrate: optimizer, trainer, checkpointing, fault tolerance."""
+from repro.train.checkpoint import AsyncCheckpointer, latest_step, restore, save
+from repro.train.fault import (
+    FailureInjector, PreemptionError, RestartPolicy, StragglerDetector,
+    compressed_gradient, elastic_rescale_batch, remesh_plan, run_with_restarts,
+)
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state, lr_at
+from repro.train.trainer import (
+    Trainer, TrainerConfig, TrainState, make_eval_step, make_train_step,
+)

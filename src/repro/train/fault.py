@@ -1,0 +1,185 @@
+"""Fault tolerance for 1000+-node runs: failure handling, stragglers,
+elastic re-meshing, and compressed cross-pod gradient reduction.
+
+This container has one CPU device, so the *policies* are implemented and
+unit-tested against injected signals (step times, failure events), and
+the *mechanisms* (checkpoint/restart, re-mesh, compressed all-reduce)
+run for real at small scale. On a TPU fleet the same code paths hang off
+the coordinator's health callbacks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Failure simulation + restart policy
+# ---------------------------------------------------------------------------
+
+class PreemptionError(RuntimeError):
+    """Raised by the failure injector to emulate a node loss / preemption."""
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Deterministic failure schedule for tests/examples."""
+
+    fail_at_steps: Tuple[int, ...] = ()
+    raised: List[int] = dataclasses.field(default_factory=list)
+
+    def check(self, step: int):
+        if step in self.fail_at_steps and step not in self.raised:
+            self.raised.append(step)
+            raise PreemptionError(f"injected node failure at step {step}")
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    max_restarts: int = 10
+    backoff_s: float = 0.0
+    restarts: int = 0
+
+    def should_restart(self, exc: BaseException) -> bool:
+        if not isinstance(exc, PreemptionError):
+            return False
+        self.restarts += 1
+        if self.restarts > self.max_restarts:
+            return False
+        if self.backoff_s:
+            time.sleep(self.backoff_s)
+        return True
+
+
+def run_with_restarts(
+    train_loop: Callable[[int], int],
+    resume_step: Callable[[], int],
+    policy: Optional[RestartPolicy] = None,
+) -> int:
+    """Drive ``train_loop(start_step)`` to completion across failures.
+
+    ``train_loop`` returns the final step when it completes; on
+    PreemptionError we restart from the latest committed checkpoint —
+    exactly the crash-loop a cluster scheduler gives you.
+    """
+    policy = policy or RestartPolicy()
+    while True:
+        start = resume_step()
+        try:
+            return train_loop(start)
+        except PreemptionError as e:
+            if not policy.should_restart(e):
+                raise
+
+
+# ---------------------------------------------------------------------------
+# Straggler detection
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StragglerDetector:
+    """EMA + z-score step-time monitor with re-dispatch decisions.
+
+    At fleet scale each host reports step wall-time; hosts whose times
+    are persistent outliers get flagged for replacement (PUMA-style
+    backup workers / TPU slice re-scheduling). Detection logic is pure,
+    so it is unit-testable with injected timings.
+    """
+
+    ema_decay: float = 0.9
+    z_threshold: float = 3.0
+    patience: int = 3
+    _ema: Optional[float] = None
+    _var: float = 0.0
+    strikes: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def observe(self, host_times: Dict[int, float]) -> List[int]:
+        """Feed one step's per-host times; returns hosts to replace."""
+        tmed = float(np.median(list(host_times.values())))
+        if self._ema is None:
+            self._ema, self._var = tmed, (0.1 * tmed) ** 2
+        self._ema = self.ema_decay * self._ema + (1 - self.ema_decay) * tmed
+        self._var = self.ema_decay * self._var + (1 - self.ema_decay) * (
+            tmed - self._ema
+        ) ** 2
+        sigma = max(self._var ** 0.5, 1e-6 * self._ema)
+        to_replace = []
+        for host, t in host_times.items():
+            z = (t - self._ema) / sigma
+            if z > self.z_threshold:
+                self.strikes[host] = self.strikes.get(host, 0) + 1
+            else:
+                self.strikes[host] = 0
+            if self.strikes[host] >= self.patience:
+                to_replace.append(host)
+                self.strikes[host] = 0
+        return to_replace
+
+
+# ---------------------------------------------------------------------------
+# Elastic re-meshing
+# ---------------------------------------------------------------------------
+
+def remesh_plan(n_devices: int, model_parallel: int) -> Tuple[int, int]:
+    """Largest (data, model) grid for the surviving device count.
+
+    Model parallelism is kept fixed (weights must still fit); the data
+    axis shrinks to what remains — e.g. losing one host of a (16, 16)
+    mesh re-forms as (15, 16). Returns (data, model).
+    """
+    if n_devices < model_parallel:
+        raise ValueError("fewer devices than the model-parallel degree")
+    return n_devices // model_parallel, model_parallel
+
+
+def elastic_rescale_batch(global_batch: int, old_data: int, new_data: int) -> int:
+    """Keep per-replica batch constant across a re-mesh (linear scaling
+    rule handles the LR elsewhere); returns the new global batch."""
+    per_replica = global_batch // old_data
+    return per_replica * new_data
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression (int8 + error feedback) for cross-pod reduction
+# ---------------------------------------------------------------------------
+
+def compress_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_gradient(
+    grads: PyTree, error_buf: Optional[PyTree]
+) -> Tuple[PyTree, PyTree]:
+    """int8-quantize gradients with error feedback.
+
+    Returns (dequantized grads to feed the optimizer / all-reduce,
+    new error buffer). At fleet scale the int8 payload crosses the DCN
+    (4x fewer bytes on the slowest link); error feedback keeps SGD
+    convergence (Karimireddy et al. 2019).
+    """
+    if error_buf is None:
+        error_buf = jax.tree.map(jnp.zeros_like, grads)
+
+    def one(g, e):
+        corrected = g + e
+        q, s = compress_int8(corrected)
+        deq = decompress_int8(q, s)
+        return deq, corrected - deq
+
+    flat = jax.tree.map(one, grads, error_buf)
+    deq = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return deq, err

@@ -1,0 +1,112 @@
+"""Optimizers and LR schedules, pure JAX (no optax dependency).
+
+AdamW with decoupled weight decay, global-norm gradient clipping, and a
+quantization-aware parameter grouping: PSQ quantizer state (LSQ steps,
+scale factors, thresholds) gets no weight decay and an optional LR
+multiplier — standard LSQ practice, and what keeps scale-factor QAT
+stable (paper §4.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+_QUANT_PARAM_KEYS = ("step_x", "step_w", "sf", "sf_step", "alpha")
+_NO_DECAY_KEYS = _QUANT_PARAM_KEYS + ("scale", "bias", "b", "A_log", "D", "dt_bias")
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    quant_lr_mult: float = 0.1        # LSQ state learns slower
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"          # cosine | linear | constant
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def _path_key(path) -> str:
+    last = path[-1]
+    return getattr(last, "key", getattr(last, "name", str(last)))
+
+
+def _is_quant_param(path) -> bool:
+    return _path_key(path) in _QUANT_PARAM_KEYS
+
+
+def _no_decay(path) -> bool:
+    return _path_key(path) in _NO_DECAY_KEYS
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "cosine":
+        t = jnp.clip(
+            (step - cfg.warmup_steps)
+            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "linear":
+        decay = jnp.clip(
+            1.0 - (step - cfg.warmup_steps)
+            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0, 1.0,
+        )
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay
+
+
+def init_opt_state(params: PyTree) -> OptState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                    nu=jax.tree.map(jnp.zeros_like, params))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def adamw_update(
+    cfg: OptConfig, params: PyTree, grads: PyTree, state: OptState
+) -> Tuple[PyTree, OptState, Dict[str, jax.Array]]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    b1, b2 = cfg.betas
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+
+    def upd(path, p, m, v):
+        lr_p = lr * (cfg.quant_lr_mult if _is_quant_param(path) else 1.0)
+        step_ = lr_p * (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if not _no_decay(path):
+            step_ = step_ + lr_p * cfg.weight_decay * p
+        return p - step_
+
+    new_params = jax.tree_util.tree_map_with_path(upd, params, mu, nu)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step=step, mu=mu, nu=nu), metrics

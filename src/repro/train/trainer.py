@@ -1,0 +1,170 @@
+"""Training loop: jitted train_step, metrics, fault-tolerant driver.
+
+``make_train_step`` builds the pure step function that launch/dryrun.py
+lowers on the production mesh; ``Trainer`` wires data, checkpointing,
+failure recovery and straggler monitoring around it for real runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.train import checkpoint as ckpt_mod
+from repro.train.fault import (
+    FailureInjector,
+    StragglerDetector,
+    compressed_gradient,
+    run_with_restarts,
+)
+from repro.train.optimizer import (
+    OptConfig,
+    OptState,
+    adamw_update,
+    init_opt_state,
+)
+
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree
+    opt: OptState
+
+    def tree(self) -> Dict:
+        return {"params": self.params, "opt": self.opt._asdict()}
+
+    @classmethod
+    def from_tree(cls, t: Dict) -> "TrainState":
+        return cls(params=t["params"], opt=OptState(**t["opt"]))
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt_cfg: OptConfig,
+    compress_grads: bool = False,
+) -> Callable:
+    """Pure (state, batch[, err_buf]) -> (state, metrics[, err_buf])."""
+
+    def step(state: TrainState, batch: Dict, err_buf: Optional[PyTree] = None):
+        (loss, stats), grads = jax.value_and_grad(
+            lambda p: T.loss_fn(p, cfg, batch), has_aux=True
+        )(state.params)
+        if compress_grads:
+            grads, err_buf = compressed_gradient(grads, err_buf)
+        params, opt, om = adamw_update(opt_cfg, state.params, grads, state.opt)
+        metrics = {"loss": loss, **om}
+        if "p_zero_frac" in stats:
+            metrics["p_zero_frac"] = stats["p_zero_frac"]
+        if "moe_aux_loss" in stats:
+            metrics["moe_aux_loss"] = stats["moe_aux_loss"]
+        new_state = TrainState(params=params, opt=opt)
+        if compress_grads:
+            return new_state, metrics, err_buf
+        return new_state, metrics
+
+    return step
+
+
+def make_eval_step(cfg: ArchConfig) -> Callable:
+    def step(params: PyTree, batch: Dict) -> Dict:
+        loss, stats = T.loss_fn(params, cfg, batch)
+        return {"loss": loss}
+
+    return step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    log_every: int = 10
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_last: int = 2
+    compress_grads: bool = False
+
+
+class Trainer:
+    """Fault-tolerant driver around the pure step function."""
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        opt_cfg: OptConfig,
+        tcfg: TrainerConfig,
+        data_fn: Callable[[int], Dict],
+        init_key: Optional[jax.Array] = None,
+        injector: Optional[FailureInjector] = None,
+        log_fn: Callable[[str], None] = print,
+    ):
+        self.cfg, self.opt_cfg, self.tcfg = cfg, opt_cfg, tcfg
+        self.data_fn = data_fn
+        self.injector = injector
+        self.log_fn = log_fn
+        self.straggler = StragglerDetector()
+        self.checkpointer = ckpt_mod.AsyncCheckpointer(
+            tcfg.ckpt_dir, keep_last=tcfg.keep_last
+        )
+        key = init_key if init_key is not None else jax.random.PRNGKey(0)
+        params = T.init_model(key, cfg)
+        self._init_state = TrainState(params=params, opt=init_opt_state(params))
+        self._step_fn = jax.jit(
+            make_train_step(cfg, opt_cfg, compress_grads=tcfg.compress_grads)
+        )
+        self.metrics_history: list = []
+
+    # -- resume support -------------------------------------------------
+    def _resume_step(self) -> int:
+        latest = ckpt_mod.latest_step(self.tcfg.ckpt_dir)
+        return 0 if latest is None else latest
+
+    def _load_state(self, step: int) -> TrainState:
+        if step == 0 and ckpt_mod.latest_step(self.tcfg.ckpt_dir) is None:
+            return self._init_state
+        tree, _, _ = ckpt_mod.restore(
+            self.tcfg.ckpt_dir, self._init_state.tree(), step=step
+        )
+        return TrainState.from_tree(tree)
+
+    # -- main loop -------------------------------------------------------
+    def _loop(self, start_step: int) -> int:
+        state = self._load_state(start_step)
+        err_buf = None
+        for step in range(start_step, self.tcfg.total_steps):
+            if self.injector is not None:
+                self.injector.check(step)
+            t0 = time.time()
+            batch = {
+                k: jnp.asarray(v) for k, v in self.data_fn(step).items()
+            }
+            if self.tcfg.compress_grads:
+                state, metrics, err_buf = self._step_fn(state, batch, err_buf)
+            else:
+                state, metrics = self._step_fn(state, batch)
+            dt = time.time() - t0
+            self.straggler.observe({0: dt})
+            if step % self.tcfg.log_every == 0 or step == self.tcfg.total_steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                self.metrics_history.append({"step": step, **m, "dt": dt})
+                self.log_fn(
+                    f"step {step:5d} loss {m['loss']:.4f} "
+                    f"gnorm {m['grad_norm']:.2f} lr {m['lr']:.2e} ({dt:.2f}s)"
+                )
+            if (step + 1) % self.tcfg.ckpt_every == 0 or step == self.tcfg.total_steps - 1:
+                self.checkpointer.save(step + 1, state.tree())
+        self.checkpointer.wait()
+        self._final_state = state
+        return self.tcfg.total_steps
+
+    def train(self) -> TrainState:
+        run_with_restarts(self._loop, self._resume_step)
+        return getattr(self, "_final_state", None) or self._load_state(
+            self._resume_step()
+        )

@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests: reduced config, forward + train step.
+
+Required deliverable (f): every assigned arch instantiates at reduced
+size, runs one forward and one gradient step on CPU, and produces
+finite outputs of the right shape. Full configs are exercised only via
+the dry-run (ShapeDtypeStruct, no allocation).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, list_archs
+from repro.core.config import QuantConfig
+from repro.models import forward, init_model, loss_fn
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, S = 2, 16
+
+
+def _batch(cfg, key=None):
+    key = key or jax.random.PRNGKey(1)
+    tok = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tok, "targets": jnp.roll(tok, -1, axis=1)}
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jax.random.normal(key, (B, S, cfg.d_model)) * 0.1
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = (
+            jax.random.normal(key, (B, cfg.frontend_len, cfg.d_model)) * 0.1
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    logits, _ = forward(params, cfg, _batch(cfg))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_one_train_step_reduces_loss_direction(arch):
+    """One SGD step along the gradient must not produce NaNs and the
+    gradient must be non-trivial for every block family."""
+    cfg = get_config(arch).reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    (loss0, _), grads = jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, batch), has_aux=True
+    )(params)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g ** 2) for g in jax.tree.leaves(grads))
+    )
+    assert bool(jnp.isfinite(loss0)) and float(gnorm) > 0
+    lr = 0.1 / max(float(gnorm), 1.0)
+    new_params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+    loss1, _ = loss_fn(new_params, cfg, batch)
+    assert bool(jnp.isfinite(loss1))
+    assert float(loss1) < float(loss0) + 0.5  # no blow-up
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "granite-moe-3b-a800m"])
+def test_psq_mode_forward(arch):
+    """The paper's technique engages on real archs (reduced size)."""
+    cfg = get_config(arch).reduced()
+    cfg = cfg.with_quant(
+        QuantConfig(mode="psq", psq_levels="ternary", xbar_rows=32,
+                    collect_stats=True)
+    )
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    logits, stats = forward(params, cfg, _batch(cfg))
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert 0.0 < float(stats["p_zero_frac"]) < 1.0
+
+
+def test_exact_assigned_configs_match_spec():
+    """The full configs carry the exact published dimensions."""
+    spec = {
+        "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+        "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+    }
+    for name, (nl, d, h, kv, ff, v) in spec.items():
+        c = get_config(name)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+                c.vocab_size) == (nl, d, h, kv, ff, v), name
+
+
+def test_param_counts_are_in_published_ballpark():
+    """Analytic 6ND parameter counts should land near the model names."""
+    expect = {
+        "tinyllama-1.1b": (0.9e9, 1.4e9),
+        "qwen3-14b": (12e9, 17e9),
+        "starcoder2-3b": (2.5e9, 3.6e9),
+        "arctic-480b": (380e9, 520e9),
+        "xlstm-350m": (0.25e9, 0.50e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = get_config(name).param_count()
+        assert lo <= n <= hi, (name, n / 1e9)
+
+
+def test_moe_aux_loss_present():
+    cfg = get_config("granite-moe-3b-a800m").reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    _, stats = loss_fn(params, cfg, _batch(cfg))
+    assert "moe_aux_loss" in stats
+
+
+def test_zamba_shared_attention_is_shared():
+    """zamba2: attention weights appear once, reused at every attn slot."""
+    cfg = get_config("zamba2-7b").reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    assert "shared_attn" in params
+    from repro.models.transformer import layer_kinds
+
+    kinds = layer_kinds(cfg)
+    assert kinds.count("shared_attn") >= 2
+    # per-layer stacks contain only Mamba blocks; attention params exist
+    # exactly once at model level (the shared block)
+    assert "mamba_groups" in params and "blocks" not in params

@@ -1,0 +1,200 @@
+"""Layer-level model tests: attention masks, SSD/mLSTM recurrence
+equivalences, MoE routing, decode-vs-forward consistency."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.config import DENSE
+from repro.models import decode_step, forward, init_cache, init_model, prefill
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models import moe as moe_mod
+from repro.models.attention import (
+    AttnConfig,
+    apply_attention,
+    decode_attention,
+    init_attention,
+    init_kv_cache,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+KEY = jax.random.PRNGKey(0)
+
+
+class TestAttention:
+    CFG = AttnConfig(d_model=64, n_heads=4, n_kv_heads=2, head_dim=16)
+
+    def test_causality(self):
+        p = init_attention(KEY, self.CFG, DENSE)
+        x = jax.random.normal(KEY, (1, 8, 64))
+        y1, _ = apply_attention(p, x, self.CFG, DENSE)
+        x2 = x.at[:, -1].set(99.0)  # perturb the future
+        y2, _ = apply_attention(p, x2, self.CFG, DENSE)
+        np.testing.assert_allclose(
+            np.asarray(y1[:, :-1]), np.asarray(y2[:, :-1]), atol=1e-5
+        )
+
+    def test_sliding_window_blocks_distant_past(self):
+        cfg = self.CFG._replace(sliding_window=3)
+        p = init_attention(KEY, cfg, DENSE)
+        x = jax.random.normal(KEY, (1, 10, 64))
+        y1, _ = apply_attention(p, x, cfg, DENSE)
+        x2 = x.at[:, 0].set(7.0)  # outside the window of position 9
+        y2, _ = apply_attention(p, x2, cfg, DENSE)
+        np.testing.assert_allclose(
+            np.asarray(y1[:, -1]), np.asarray(y2[:, -1]), atol=1e-5
+        )
+
+    def test_decode_matches_forward(self):
+        """Token-by-token decode == parallel causal attention."""
+        p = init_attention(KEY, self.CFG, DENSE)
+        S = 6
+        x = jax.random.normal(KEY, (2, S, 64)) * 0.5
+        y_par, _ = apply_attention(p, x, self.CFG, DENSE)
+        cache = init_kv_cache(2, S, 2, 16, dtype=jnp.float32)
+        outs = []
+        for t in range(S):
+            y_t, cache, _ = decode_attention(
+                p, x[:, t : t + 1], cache, self.CFG, DENSE
+            )
+            outs.append(y_t)
+        y_seq = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(y_par), np.asarray(y_seq), atol=1e-4
+        )
+
+
+class TestSSD:
+    def test_chunked_matches_sequential(self):
+        b, s, h, p, n = 2, 37, 3, 8, 4
+        k1, k2, k3, k4 = jax.random.split(KEY, 4)
+        xh = jax.random.normal(k1, (b, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(k2, (b, s, h)))
+        A = -jnp.exp(jax.random.normal(k3, (h,)))
+        Bm = jax.random.normal(k4, (b, s, n))
+        Cm = jax.random.normal(jax.random.fold_in(KEY, 9), (b, s, n))
+        y_seq = ssm_mod.ssd_sequential_reference(xh, dt, A, Bm, Cm)
+        y_chk, _ = ssm_mod._ssd_chunked(xh, dt, A, Bm, Cm, chunk=8)
+        np.testing.assert_allclose(
+            np.asarray(y_seq), np.asarray(y_chk), rtol=1e-4, atol=1e-4
+        )
+
+    def test_mamba_decode_matches_parallel(self):
+        cfg = ssm_mod.SSMConfig(d_model=32, d_state=8, head_dim=16)
+        p = ssm_mod.init_mamba2(KEY, cfg, DENSE)
+        x = jax.random.normal(KEY, (2, 9, 32)) * 0.5
+        y_par, _ = ssm_mod.apply_mamba2(p, x, cfg, DENSE, chunk=4)
+        cache = ssm_mod.init_mamba2_cache(2, cfg)
+        outs = []
+        for t in range(9):
+            y_t, cache, _ = ssm_mod.decode_mamba2(
+                p, x[:, t : t + 1], cache, cfg, DENSE
+            )
+            outs.append(y_t)
+        y_seq = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(y_par), np.asarray(y_seq), rtol=1e-4, atol=1e-4
+        )
+
+
+class TestXLSTM:
+    def test_chunked_matches_parallel_oracle(self):
+        b, s, h, d = 2, 19, 2, 8
+        ks = jax.random.split(KEY, 5)
+        q, k, v = (jax.random.normal(ks[i], (b, s, h, d)) for i in range(3))
+        i_pre = jax.random.normal(ks[3], (b, s, h))
+        f_pre = jax.random.normal(ks[4], (b, s, h)) + 2.0
+        y_par = xlstm_mod._mlstm_parallel(q, k / math.sqrt(d) * math.sqrt(d), v, i_pre, f_pre)
+        y_chk, _ = xlstm_mod._mlstm_chunked(q, k, v, i_pre, f_pre, chunk=5)
+        np.testing.assert_allclose(
+            np.asarray(y_par), np.asarray(y_chk), rtol=1e-4, atol=1e-4
+        )
+
+    def test_mlstm_decode_matches_chunked(self):
+        cfg = xlstm_mod.XLSTMConfig(d_model=16, n_heads=2)
+        p = xlstm_mod.init_mlstm(KEY, cfg, DENSE)
+        x = jax.random.normal(KEY, (2, 7, 16)) * 0.5
+        y_par, _ = xlstm_mod.apply_mlstm(p, x, cfg, DENSE, chunk=3)
+        cache = xlstm_mod.init_mlstm_cache(2, cfg)
+        outs = []
+        for t in range(7):
+            y_t, cache, _ = xlstm_mod.decode_mlstm(
+                p, x[:, t : t + 1], cache, cfg, DENSE
+            )
+            outs.append(y_t)
+        y_seq = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(y_par), np.asarray(y_seq), rtol=1e-4, atol=1e-4
+        )
+
+
+class TestMoE:
+    def test_routing_conservation(self):
+        """With huge capacity nothing is dropped; outputs are a convex
+        combination of expert outputs (gates sum to 1)."""
+        p = moe_mod.init_moe(KEY, 16, 32, n_experts=4, top_k=2, quant=DENSE)
+        x = jax.random.normal(KEY, (2, 8, 16))
+        y, stats = moe_mod.apply_moe(
+            p, x, 4, 2, DENSE, capacity_factor=8.0, chunk_size=16
+        )
+        assert y.shape == x.shape
+        assert bool(jnp.all(jnp.isfinite(y)))
+        assert float(stats["moe_aux_loss"]) >= 1.0 - 1e-5  # >= 1 by Cauchy-Schwarz
+
+    def test_capacity_drops_tokens(self):
+        p = moe_mod.init_moe(KEY, 16, 32, n_experts=4, top_k=1, quant=DENSE)
+        x = jax.random.normal(KEY, (1, 64, 16))
+        y_small, _ = moe_mod.apply_moe(
+            p, x, 4, 1, DENSE, capacity_factor=0.1, chunk_size=64
+        )
+        y_big, _ = moe_mod.apply_moe(
+            p, x, 4, 1, DENSE, capacity_factor=8.0, chunk_size=64
+        )
+        # tight capacity zeroes some tokens' outputs
+        dropped = jnp.sum(jnp.all(y_small == 0.0, axis=-1))
+        assert int(dropped) > 0
+        assert float(jnp.linalg.norm(y_big)) > float(jnp.linalg.norm(y_small))
+
+    def test_chunk_invariance(self):
+        """Same capacity-per-token => chunking must not change routing."""
+        p = moe_mod.init_moe(KEY, 8, 16, n_experts=2, top_k=1, quant=DENSE)
+        x = jax.random.normal(KEY, (1, 32, 8))
+        y1, _ = moe_mod.apply_moe(p, x, 2, 1, DENSE, capacity_factor=16.0,
+                                  chunk_size=32)
+        y2, _ = moe_mod.apply_moe(p, x, 2, 1, DENSE, capacity_factor=16.0,
+                                  chunk_size=8)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+
+class TestEndToEndDecode:
+    @pytest.mark.parametrize(
+        "arch", ["tinyllama-1.1b", "zamba2-7b", "xlstm-350m", "whisper-large-v3"]
+    )
+    def test_prefill_then_decode_matches_forward(self, arch):
+        """prefill(t[:n]) + decode(t[n]) logits == forward(t[:n+1])[-1]."""
+        cfg = get_config(arch).reduced()
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        S = 8
+        key = jax.random.PRNGKey(3)
+        tok = jax.random.randint(key, (1, S + 1), 0, cfg.vocab_size)
+        batch = {"tokens": tok[:, : S + 1]}
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = jax.random.normal(key, (1, S, cfg.d_model)) * 0.1
+        logits_full, _ = forward(params, cfg, batch)
+
+        pre_batch = dict(batch, tokens=tok[:, :S])
+        logits_pre, cache = prefill(params, cfg, pre_batch, max_len=S + 4,
+                                    dtype=jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(logits_full[:, :S]), np.asarray(logits_pre),
+            rtol=2e-2, atol=2e-2,
+        )
+        logits_dec, cache = decode_step(params, cfg, tok[:, S : S + 1], cache)
+        np.testing.assert_allclose(
+            np.asarray(logits_full[:, S]), np.asarray(logits_dec[:, 0]),
+            rtol=2e-2, atol=2e-2,
+        )

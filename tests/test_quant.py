@@ -1,0 +1,138 @@
+"""Unit + property tests for the quantization primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestRounding:
+    def test_round_ste_forward(self):
+        x = jnp.array([-1.5, -0.5, 0.5, 1.5, 2.4, 2.6])
+        np.testing.assert_array_equal(
+            quant.round_ste(x), jnp.round(x)
+        )
+
+    def test_round_ste_gradient_is_identity(self):
+        g = jax.grad(lambda x: quant.round_ste(x).sum())(jnp.array([0.3, 1.7]))
+        np.testing.assert_array_equal(g, jnp.ones(2))
+
+    def test_round_comparator_ties_away(self):
+        x = jnp.array([-1.5, -0.5, 0.5, 1.5])
+        np.testing.assert_array_equal(
+            quant.round_comparator(x), jnp.array([-2.0, -1.0, 1.0, 2.0])
+        )
+
+    def test_grad_scale(self):
+        x = jnp.array(3.0)
+        assert float(quant.grad_scale(x, 0.25)) == 3.0
+        g = jax.grad(lambda v: quant.grad_scale(v, 0.25))(x)
+        assert float(g) == 0.25
+
+
+class TestLSQ:
+    def test_quantize_levels(self):
+        x = jnp.linspace(-3, 3, 100)
+        y = quant.lsq_quantize(x, jnp.array(0.5), -8, 7)
+        codes = np.unique(np.asarray(y) / 0.5)
+        assert np.all(codes >= -8) and np.all(codes <= 7)
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-6)
+
+    def test_clip_blocks_gradient(self):
+        # outside-range inputs get zero gradient (LSQ clip behavior)
+        g = jax.grad(
+            lambda x: quant.lsq_quantize(x, jnp.array(0.5), -8, 7).sum()
+        )(jnp.array([100.0, 0.2, -100.0]))
+        np.testing.assert_array_equal(g, jnp.array([0.0, 1.0, 0.0]))
+
+    def test_step_gradient_matches_lsq_formula(self):
+        # d/ds [round(x/s)*s] = round(x/s) - x/s (in range), times grad scale g
+        x, s, g = jnp.array([1.3]), jnp.array(0.5), 0.125
+        grad_s = jax.grad(
+            lambda s_: quant.lsq_quantize(x, s_, -8, 7, g=g).sum()
+        )(s)
+        v = 1.3 / 0.5
+        expected = (np.round(v) - v) * g
+        np.testing.assert_allclose(float(grad_s), expected, rtol=1e-5)
+
+
+class TestBitSlicing:
+    @given(
+        n_bits=st.integers(2, 8),
+        seed=st.integers(0, 2 ** 16),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_twos_complement_roundtrip(self, n_bits, seed):
+        rng = np.random.RandomState(seed)
+        lo, hi = -(2 ** (n_bits - 1)), 2 ** (n_bits - 1) - 1
+        x = jnp.asarray(rng.randint(lo, hi + 1, size=(4, 7)), jnp.float32)
+        bits = quant.twos_complement_bits(x, n_bits)
+        w = quant.bit_weights(n_bits)
+        recon = jnp.einsum("k,k...->...", w, bits)
+        np.testing.assert_array_equal(np.asarray(recon), np.asarray(x))
+        assert set(np.unique(np.asarray(bits))) <= {0.0, 1.0}
+
+    def test_unsigned_bits(self):
+        x = jnp.asarray([[0, 1, 5, 15]], jnp.float32)
+        bits = quant.unsigned_bits(x, 4)
+        w = jnp.asarray([1.0, 2.0, 4.0, 8.0])
+        recon = jnp.einsum("k,k...->...", w, bits)
+        np.testing.assert_array_equal(np.asarray(recon), np.asarray(x))
+
+
+class TestScaleFactorQuant:
+    def test_codes_are_fixed_point(self):
+        sf = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (3, 4, 4, 5))) * 10
+        step = jnp.array(0.5)
+        q = quant.quantize_scale_factors(sf, step, n_bits=4)
+        codes = np.asarray(q) / 0.5
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-5)
+        assert codes.max() <= 15 and codes.min() >= 0
+
+    def test_nonnegative(self):
+        sf = jnp.array([-1.0, 0.0, 3.0])
+        q = quant.quantize_scale_factors(sf, jnp.array(1.0), n_bits=4)
+        assert float(q.min()) >= 0.0
+
+
+class TestADC:
+    @given(bits=st.integers(1, 8), rows=st.sampled_from([32, 64, 128]))
+    @settings(max_examples=30, deadline=None)
+    def test_adc_error_bound(self, bits, rows):
+        ps = jnp.arange(0, rows + 1, dtype=jnp.float32)
+        q = quant.adc_quantize(ps, bits, rows)
+        step = max(1.0, rows / 2 ** bits)
+        # everything except top-code clipping is within half a step
+        interior = np.asarray(ps) <= (2 ** bits - 1) * step
+        err = np.abs(np.asarray(q - ps))
+        assert err[interior].max() <= step / 2 + 1e-5
+
+    def test_ideal_precision_is_exact_interior(self):
+        ps = jnp.arange(0, 128, dtype=jnp.float32)  # below top code
+        q = quant.adc_quantize(ps, 8, 128)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(ps))
+
+
+class TestComparators:
+    def test_ternary_thresholds_inclusive(self):
+        alpha = jnp.array(2.0)
+        a = jnp.array([-3.0, -2.0, -1.9, 0.0, 1.9, 2.0, 3.0])
+        p = quant.ternary_comparator(a, alpha)
+        np.testing.assert_array_equal(
+            np.asarray(p), [-1.0, -1.0, 0.0, 0.0, 0.0, 1.0, 1.0]
+        )
+
+    def test_binary_sign_zero_positive(self):
+        p = quant.binary_comparator(jnp.array([-0.1, 0.0, 0.1]), jnp.array(1.0))
+        np.testing.assert_array_equal(np.asarray(p), [-1.0, 1.0, 1.0])
+
+    def test_alpha_gradient_nonzero(self):
+        a = jnp.linspace(-5, 5, 50)
+        g = jax.grad(
+            lambda al: (quant.ternary_comparator(a, al) ** 2).sum()
+        )(jnp.array(2.0))
+        assert np.isfinite(float(g))

@@ -1,0 +1,129 @@
+"""Sharding rules: logical axes, divisibility guards, param specs, serve."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import (
+    RULES_2D, axis_rules, constrain, logical_to_pspec,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestLogicalRules:
+    def test_noop_without_rules(self):
+        x = jnp.ones((4, 8))
+        y = constrain(x, "batch", "embed")
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_pspec_mapping(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        with axis_rules(RULES_2D, mesh):
+            spec = logical_to_pspec(["batch", "seq", "ffn"], shape=(4, 8, 16))
+        assert spec == P("data", None, "model")
+
+    def test_divisibility_guard(self):
+        mesh = jax.sharding.AbstractMesh((1, 2), ("data", "model"))
+        with axis_rules(RULES_2D, mesh):
+            # 7 not divisible by model=2 -> unsharded
+            spec = logical_to_pspec(["batch", "ffn"], shape=(4, 7))
+        assert spec == P("data")
+
+    def test_duplicate_axis_dedup(self):
+        """Two logical dims mapping to the same mesh axis: first wins."""
+        mesh = jax.sharding.AbstractMesh((1, 2), ("data", "model"))
+        with axis_rules(RULES_2D, mesh):
+            spec = logical_to_pspec(
+                ["experts", None, "expert_ffn"], shape=(4, 2, 8)
+            )
+        assert spec == P("model")  # expert_ffn dropped, no duplicates
+
+
+class TestParamSpecs:
+    def test_qkv_and_down_proj_rules(self):
+        from repro.launch.specs import param_pspec
+
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+        class Leaf:
+            def __init__(self, shape):
+                self.shape = shape
+                self.ndim = len(shape)
+
+        class K:
+            def __init__(self, key):
+                self.key = key
+
+        spec = param_pspec([K("blocks"), K("attn"), K("wq"), K("w")],
+                           Leaf((22, 128, 64)), mesh)
+        assert spec == P(None, None, "model")
+        spec = param_pspec([K("blocks"), K("mlp"), K("down"), K("w")],
+                           Leaf((22, 256, 128)), mesh)
+        assert spec == P(None, "model")
+        spec = param_pspec([K("blocks"), K("norm1"), K("scale")],
+                           Leaf((128,)), mesh)
+        assert spec == P()
+
+    def test_moe_expert_parallel_vs_ffn_sharding(self):
+        from repro.launch.specs import param_pspec
+
+        class Leaf:
+            def __init__(self, shape):
+                self.shape = shape
+                self.ndim = len(shape)
+
+        class K:
+            def __init__(self, key):
+                self.key = key
+
+        mesh = jax.sharding.AbstractMesh((1, 2), ("data", "model"))
+        # 128 experts divisible by 2 -> EP
+        spec = param_pspec([K("moe"), K("w_gate")], Leaf((35, 128, 64, 32)),
+                           mesh)
+        assert spec == P(None, "model")
+        # 41 experts not divisible -> shard expert ffn dim
+        spec = param_pspec([K("moe"), K("w_gate")], Leaf((35, 41, 64, 32)),
+                           mesh)
+        assert spec == P(None, None, None, "model")
+
+
+class TestServeEngine:
+    def test_batched_requests_complete(self):
+        import numpy as np
+
+        from repro.configs import get_config
+        from repro.models import init_model
+        from repro.serve import EngineConfig, ServeEngine, throughput_stats
+
+        cfg = get_config("tinyllama-1.1b").reduced()
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        eng = ServeEngine(params, cfg, EngineConfig(max_batch=3, max_len=48))
+        rng = np.random.RandomState(0)
+        for _ in range(5):
+            eng.submit(rng.randint(0, cfg.vocab_size, size=rng.randint(2, 8)),
+                       max_new_tokens=6)
+        done = eng.run()
+        assert len(done) == 5
+        assert all(len(r.output) == 6 for r in done)
+        stats = throughput_stats(done)
+        assert stats["total_tokens"] == 30 and stats["tokens_per_s"] > 0
+
+    def test_int4_serving_matches_greedy_mostly(self):
+        import numpy as np
+
+        from repro.configs import get_config
+        from repro.core.psq_linear import pack_tree_for_serving
+        from repro.models import init_model
+        from repro.serve import EngineConfig, ServeEngine
+
+        cfg = get_config("tinyllama-1.1b").reduced()
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        prompt = np.arange(5) % cfg.vocab_size
+        outs = {}
+        for name, p in [("fp", params), ("int4", pack_tree_for_serving(params))]:
+            eng = ServeEngine(p, cfg, EngineConfig(max_batch=1, max_len=32))
+            eng.submit(prompt, max_new_tokens=4)
+            outs[name] = eng.run()[0].output
+        assert len(outs["fp"]) == len(outs["int4"]) == 4

@@ -1,0 +1,226 @@
+"""Training substrate: optimizer, checkpointing, fault tolerance, data."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import ClassificationConfig, ClassificationStream, DataConfig, TokenStream
+from repro.train import (
+    FailureInjector,
+    OptConfig,
+    PreemptionError,
+    RestartPolicy,
+    StragglerDetector,
+    Trainer,
+    TrainerConfig,
+    compressed_gradient,
+    elastic_rescale_batch,
+    init_opt_state,
+    latest_step,
+    lr_at,
+    remesh_plan,
+    restore,
+    run_with_restarts,
+    save,
+)
+from repro.train.optimizer import adamw_update, clip_by_global_norm
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestOptimizer:
+    def _params(self):
+        k = jax.random.PRNGKey(0)
+        return {"w": jax.random.normal(k, (8, 4)), "b": jnp.zeros((4,)),
+                "sf": jnp.ones((3,))}
+
+    def test_adamw_moves_params(self):
+        p = self._params()
+        g = jax.tree.map(jnp.ones_like, p)
+        cfg = OptConfig(lr=1e-2, warmup_steps=0)
+        p2, st, m = adamw_update(cfg, p, g, init_opt_state(p))
+        assert float(jnp.abs(p2["w"] - p["w"]).max()) > 0
+        assert int(st.step) == 1 and float(m["grad_norm"]) > 0
+
+    def test_no_decay_on_quant_params(self):
+        """LSQ state must not be weight-decayed (it is not a weight)."""
+        p = {"sf": jnp.full((4,), 100.0), "w": jnp.full((4,), 100.0)}
+        g = {"sf": jnp.zeros((4,)), "w": jnp.zeros((4,))}
+        cfg = OptConfig(lr=1.0, weight_decay=0.5, warmup_steps=0,
+                        quant_lr_mult=1.0)
+        p2, _, _ = adamw_update(cfg, p, g, init_opt_state(p))
+        np.testing.assert_array_equal(np.asarray(p2["sf"]), 100.0)
+        assert float(p2["w"][0]) < 100.0  # decayed
+
+    def test_clip_by_global_norm(self):
+        g = {"a": jnp.full((10,), 10.0)}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+
+    def test_warmup_cosine_schedule(self):
+        cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=110)
+        assert float(lr_at(cfg, jnp.asarray(0))) == 0.0
+        assert abs(float(lr_at(cfg, jnp.asarray(10))) - 1.0) < 1e-6
+        assert float(lr_at(cfg, jnp.asarray(110))) < 1e-6
+
+
+class TestCheckpoint:
+    def _tree(self, seed=0):
+        k = jax.random.PRNGKey(seed)
+        return {"params": {"w": jax.random.normal(k, (32, 16))},
+                "opt": {"step": jnp.asarray(7, jnp.int32)}}
+
+    def test_roundtrip_identity(self):
+        t = self._tree()
+        with tempfile.TemporaryDirectory() as d:
+            save(d, 5, t)
+            t2, step, _ = restore(d, t)
+            assert step == 5
+            np.testing.assert_array_equal(
+                np.asarray(t["params"]["w"]), np.asarray(t2["params"]["w"])
+            )
+
+    def test_atomic_no_partial_checkpoint_visible(self):
+        t = self._tree()
+        with tempfile.TemporaryDirectory() as d:
+            save(d, 1, t)
+            # simulate a crashed write: stray tmp dir without commit marker
+            os.makedirs(os.path.join(d, "step_00000009.tmp"))
+            os.makedirs(os.path.join(d, "step_00000010"))  # no _COMMITTED
+            assert latest_step(d) == 1
+
+    def test_keep_last_gc(self):
+        t = self._tree()
+        with tempfile.TemporaryDirectory() as d:
+            for s in range(6):
+                save(d, s, t, keep_last=2)
+            from repro.train.checkpoint import all_steps
+
+            assert all_steps(d) == [4, 5]
+
+    def test_restore_latest_by_default(self):
+        with tempfile.TemporaryDirectory() as d:
+            save(d, 1, self._tree(1))
+            save(d, 9, self._tree(9))
+            t9, step, _ = restore(d, self._tree())
+            assert step == 9
+
+
+class TestFaultTolerance:
+    def test_run_with_restarts_resumes(self):
+        calls = []
+
+        def loop(start):
+            calls.append(start)
+            if len(calls) < 3:
+                raise PreemptionError("boom")
+            return 100
+
+        steps = iter([0, 40, 80])
+        assert run_with_restarts(loop, lambda: next(steps)) == 100
+        assert calls == [0, 40, 80]
+
+    def test_restart_policy_limits(self):
+        pol = RestartPolicy(max_restarts=2)
+        assert pol.should_restart(PreemptionError())
+        assert pol.should_restart(PreemptionError())
+        assert not pol.should_restart(PreemptionError())
+        assert not pol.should_restart(ValueError())
+
+    def test_straggler_detection(self):
+        det = StragglerDetector(patience=2)
+        flagged = []
+        for step in range(8):
+            times = {h: 1.0 for h in range(8)}
+            times[3] = 5.0  # persistent straggler
+            flagged += det.observe(times)
+        assert 3 in flagged
+        # healthy hosts never flagged
+        assert set(flagged) == {3}
+
+    def test_remesh_plan(self):
+        assert remesh_plan(256, 16) == (16, 16)
+        assert remesh_plan(240, 16) == (15, 16)
+        with pytest.raises(ValueError):
+            remesh_plan(8, 16)
+
+    def test_elastic_batch_rescale(self):
+        assert elastic_rescale_batch(256, 16, 15) == 240
+
+    @given(seed=st.integers(0, 100))
+    @settings(max_examples=10, deadline=None)
+    def test_compression_error_feedback_bounded(self, seed):
+        """int8 + error feedback: per-step residual stays bounded."""
+        k = jax.random.PRNGKey(seed)
+        g = {"w": jax.random.normal(k, (64,)) * 5.0}
+        err = None
+        for _ in range(4):
+            deq, err = compressed_gradient(g, err)
+        scale = float(jnp.max(jnp.abs(g["w"])) ) / 127.0
+        assert float(jnp.max(jnp.abs(err["w"]))) <= scale * 1.01
+
+    def test_trainer_recovers_from_injected_failure(self):
+        from repro.configs import get_config
+
+        cfg = get_config("tinyllama-1.1b").reduced()
+        dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=2)
+        stream = TokenStream(dc)
+        with tempfile.TemporaryDirectory() as d:
+            tr = Trainer(
+                cfg, OptConfig(lr=1e-3, warmup_steps=2, total_steps=12),
+                TrainerConfig(total_steps=12, ckpt_every=4, log_every=100,
+                              ckpt_dir=d),
+                data_fn=stream.batch_at,
+                injector=FailureInjector(fail_at_steps=(6,)),
+                log_fn=lambda s: None,
+            )
+            tr.train()
+            assert tr.injector.raised == [6]
+            assert latest_step(d) == 12
+
+
+class TestData:
+    def test_deterministic_and_seekable(self):
+        cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=4)
+        s1, s2 = TokenStream(cfg), TokenStream(cfg)
+        b1, b2 = s1.batch_at(17), s2.batch_at(17)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_host_sharding_disjoint(self):
+        base = dict(vocab_size=1000, seq_len=16, global_batch=8, n_hosts=2)
+        h0 = TokenStream(DataConfig(host_id=0, **base)).batch_at(3)
+        h1 = TokenStream(DataConfig(host_id=1, **base)).batch_at(3)
+        assert h0["tokens"].shape == (4, 16)
+        assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+    def test_targets_are_shifted_tokens(self):
+        cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=2)
+        b = TokenStream(cfg).batch_at(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+
+    def test_markov_structure_is_learnable(self):
+        """Structured tokens must have sub-uniform conditional entropy."""
+        cfg = DataConfig(vocab_size=64, seq_len=256, global_batch=8,
+                         structure=1.0)
+        b = TokenStream(cfg).batch_at(0)
+        # each token has <= 8 successors -> bigram entropy <= log(8)
+        from collections import defaultdict
+
+        succ = defaultdict(set)
+        for row in b["tokens"]:
+            for a, c in zip(row[:-1], row[1:]):
+                succ[int(a)].add(int(c))
+        max_succ = max(len(v) for v in succ.values())
+        assert max_succ <= 8
+
+    def test_classification_stream_separable(self):
+        cfg = ClassificationConfig(dim=64, train_noise=0.1)
+        s = ClassificationStream(cfg)
+        x, y = s.batch_at(0, 256)
+        # nearest-prototype classification should be near-perfect
+        pred = np.argmax(x @ s.protos.T, axis=1)
+        assert (pred == y).mean() > 0.95
