@@ -1,50 +1,121 @@
-"""Pallas kernel micro-bench (interpret mode: correctness-path timing
-only — TPU perf is assessed structurally via the §Roofline dry-run)."""
+"""Kernel micro-bench, swept over every registered backend.
+
+Times the PSQ crossbar matmul (loop + fused-plane variants) and the int4
+weight-stationary decode matmul through :mod:`repro.kernels.registry`, so
+any newly registered backend is benchmarked side-by-side with zero
+changes here, plus the PackedLayer serving cache cold (quantize + pack +
+call) vs warm (cached) path.
+
+Interpret-mode numbers are correctness-path timings only — TPU perf is
+assessed structurally via the §Roofline dry-run.
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py [--smoke] [--backend X]
+"""
 from __future__ import annotations
 
+import argparse
+import math
 import time
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.psq_matmul import psq_matmul_kernel
-from repro.kernels.int4_matmul import int4_matmul_kernel, pack_int4
-from repro.kernels.ref import psq_matmul_ref
+from repro.core.config import QuantConfig
+from repro.core.psq_linear import init_linear
+from repro.kernels import registry
+from repro.kernels.int4_matmul import pack_int4
+from repro.serve.cache import PackedLayer
 
 
 def _time(f, n=3):
-    f()  # compile
+    jax.block_until_ready(f())  # compile + warm, fully retired
     t0 = time.time()
     for _ in range(n):
         jax.block_until_ready(f())
     return (time.time() - t0) / n * 1e6
 
 
-def run(fast: bool = False) -> List[Tuple[str, float, str]]:
-    B, K, O, R = 64, 512, 256, 128
+def run(fast: bool = False,
+        only_backend: Optional[str] = None) -> List[Tuple[str, float, str]]:
+    if only_backend is not None:
+        # fail fast with the registry's message (names the platform and
+        # the available alternatives) instead of a silent empty sweep
+        registry.get_backend(only_backend)
+    if fast:
+        B, K, O, R = 16, 256, 128, 128
+        n_rep = 1
+    else:
+        B, K, O, R = 64, 512, 256, 128
+        n_rep = 3
     key = jax.random.PRNGKey(0)
     x = jnp.round(jax.random.uniform(key, (B, K), minval=-8, maxval=7))
     w = jnp.round(jax.random.uniform(key, (K, O), minval=-8, maxval=7))
-    import math
     T = math.ceil(K / R)
     sf = jnp.ones((T, 4, 4, O)) * 0.5
     alpha = jnp.asarray(5.0)
     kw = dict(n_a=4, n_w=4, levels="ternary", adc_bits=4, xbar_rows=R)
-    rows = []
-    us_k = _time(lambda: psq_matmul_kernel(x, w, sf, alpha, **kw))
-    us_kf = _time(lambda: psq_matmul_kernel(x, w, sf, alpha, fuse_planes=True, **kw))
-    us_r = _time(lambda: psq_matmul_ref(x, w, sf, alpha, **kw))
-    rows.append(("kernel/psq_matmul_interp", us_k, f"ref_us={us_r:.0f}"))
-    rows.append(("kernel/psq_matmul_fused", us_kf, f"loop_us={us_k:.0f}"))
     wp = pack_int4(w)
     scale = jnp.ones((O,))
-    us_i = _time(lambda: int4_matmul_kernel(x, wp, scale))
-    rows.append(("kernel/int4_matmul_interp", us_i,
-                 f"bytes_ratio_vs_bf16={0.5 / 2.0}"))
+
+    backends = registry.available_backends()
+    if only_backend:
+        backends = [b for b in backends if b == only_backend]
+    # only report platform-unavailable backends, not --backend filtering
+    skipped = sorted(
+        set(registry.registered_backends())
+        - set(registry.available_backends())
+    )
+
+    rows: List[Tuple[str, float, str]] = []
+    for name in backends:
+        impl = registry.get_backend(name)
+        us = _time(lambda: impl.psq_matmul(x, w, sf, alpha, **kw), n_rep)
+        rows.append((f"kernel/psq_matmul[{name}]", us, f"B{B}xK{K}xO{O}"))
+        us_f = _time(
+            lambda: impl.psq_matmul(x, w, sf, alpha, fuse_planes=True, **kw),
+            n_rep,
+        )
+        rows.append((f"kernel/psq_matmul_fused[{name}]", us_f,
+                     f"loop_us={us:.0f}"))
+        us_i = _time(lambda: impl.int4_matmul(x, wp, scale), n_rep)
+        rows.append((f"kernel/int4_matmul[{name}]", us_i,
+                     f"bytes_ratio_vs_bf16={0.5 / 2.0}"))
+
+    # --- serving cache: per-call cost with vs without cached packing ---
+    cfg = QuantConfig(mode="psq", xbar_rows=R,
+                      kernel_backend=only_backend or "reference")
+    params = init_linear(jax.random.PRNGKey(1), K, O, cfg)
+    xf = jax.random.normal(jax.random.PRNGKey(2), (B, K))
+    apply_packed = jax.jit(lambda layer, x: layer.apply_serving(x)[0])
+    packed = PackedLayer.pack(params, cfg)
+    us_warm = _time(lambda: apply_packed(packed, xf), n_rep)
+
+    def cold_call():
+        layer = PackedLayer.pack(params, cfg)  # re-derive every call
+        return apply_packed(layer, xf)
+
+    us_cold = _time(cold_call, n_rep)
+    rows.append(("serve/packed_layer_warm", us_warm,
+                 f"cold_us={us_cold:.0f},speedup={us_cold / us_warm:.2f}x"))
+    if skipped:
+        rows.append(("kernel/skipped_backends", 0.0,
+                     f"unavailable_on_{jax.default_backend()}:"
+                     + "|".join(skipped)))
     return rows
 
 
-if __name__ == "__main__":
-    for r in run():
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes, single rep (CI mode)")
+    ap.add_argument("--backend", default=None,
+                    choices=registry.registered_backends(),
+                    help="bench a single backend")
+    args = ap.parse_args()
+    for r in run(fast=args.smoke, only_backend=args.backend):
         print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,16 +1,43 @@
-"""Batched serving demo: prefill + decode with KV caches, plus the int4
-PSQ deployment path (weights packed to two 4-bit codes per byte — the
-TPU analogue of HCiM's weight-stationary crossbars).
+"""Batched serving demo: prefill + decode with KV caches, across the
+three deployment formats —
+
+  * fp32 master weights,
+  * int4-packed weights (two 4-bit codes per byte — the TPU analogue of
+    HCiM's weight-stationary crossbars),
+  * the full HCiM PSQ pipeline served from the PackedLayer cache:
+    weights quantized, int4 planes packed and scale factors precomputed
+    ONCE at load, reused across every request.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
+import dataclasses
+
 import numpy as np
 import jax
 
 from repro.configs import get_config
+from repro.core.config import PSQ_TERNARY
 from repro.core.psq_linear import pack_tree_for_serving
 from repro.models import init_model
-from repro.serve import EngineConfig, ServeEngine, throughput_stats
+from repro.serve import (
+    EngineConfig, PackedModelCache, ServeEngine, pack_tree_psq,
+    throughput_stats,
+)
+
+
+def run_engine(label, params, cfg, rng):
+    eng = ServeEngine(params, cfg, EngineConfig(max_batch=4, max_len=64,
+                                                temperature=0.7))
+    for _ in range(8):
+        prompt = rng.randint(0, cfg.vocab_size, size=rng.randint(4, 12))
+        eng.submit(prompt, max_new_tokens=12)
+    done = eng.run()
+    stats = throughput_stats(done)
+    nbytes = sum(x.nbytes for x in jax.tree.leaves(params))
+    print(f"{label:22s}: {stats['requests']} reqs, "
+          f"{stats['total_tokens']} tokens, "
+          f"{stats['tokens_per_s']:.1f} tok/s, "
+          f"weights {nbytes / 1e6:.1f} MB")
 
 
 def main():
@@ -18,22 +45,19 @@ def main():
     params = init_model(jax.random.PRNGKey(0), cfg)
     rng = np.random.RandomState(0)
 
-    for label, p in [
-        ("fp32 weights", params),
-        ("int4-packed weights", pack_tree_for_serving(params)),
-    ]:
-        eng = ServeEngine(p, cfg, EngineConfig(max_batch=4, max_len=64,
-                                               temperature=0.7))
-        for _ in range(8):
-            prompt = rng.randint(0, cfg.vocab_size, size=rng.randint(4, 12))
-            eng.submit(prompt, max_new_tokens=12)
-        done = eng.run()
-        stats = throughput_stats(done)
-        nbytes = sum(x.nbytes for x in jax.tree.leaves(p))
-        print(f"{label:22s}: {stats['requests']} reqs, "
-              f"{stats['total_tokens']} tokens, "
-              f"{stats['tokens_per_s']:.1f} tok/s, "
-              f"weights {nbytes / 1e6:.1f} MB")
+    run_engine("fp32 weights", params, cfg, rng)
+    run_engine("int4-packed weights", pack_tree_for_serving(params), cfg, rng)
+
+    # Full HCiM pipeline from the weight-stationary cache. The 'reference'
+    # backend is the fast jnp path on CPU; on TPU pass 'pallas'.
+    qcfg = dataclasses.replace(PSQ_TERNARY, kernel_backend="reference",
+                               xbar_rows=64)
+    psq_cfg = cfg.with_quant(qcfg)
+    psq_params = init_model(jax.random.PRNGKey(0), psq_cfg)
+    cache = PackedModelCache()
+    packed = pack_tree_psq(psq_params, qcfg, cache)
+    print(f"packed once at load: {cache.stats()}")
+    run_engine("psq PackedLayer cache", packed, psq_cfg, rng)
 
 
 if __name__ == "__main__":

@@ -38,7 +38,12 @@ class QuantConfig:
     sf_granularity: str = "column"
     per_channel_w: bool = False             # paper quantizes per layer
     collect_stats: bool = False             # export ternary sparsity etc.
-    use_kernel: bool = False                # Pallas kernel vs jnp reference
+    use_kernel: bool = False                # kernel path vs jnp QAT reference
+    # named implementation from repro.kernels.registry; None -> process
+    # default ("pallas-interpret" unless overridden). Setting a backend
+    # implies the kernel path (see ``kernel_path``).
+    kernel_backend: Optional[str] = None
+    fuse_planes: bool = False               # single-MXU-pass bit-plane fusion
 
     def __post_init__(self):
         assert self.mode in ("none", "psq", "adc"), self.mode
@@ -49,6 +54,11 @@ class QuantConfig:
     @property
     def quantized(self) -> bool:
         return self.mode != "none"
+
+    @property
+    def kernel_path(self) -> bool:
+        """Route through the kernel registry rather than the jnp QAT ref."""
+        return self.use_kernel or self.kernel_backend is not None
 
     def sf_shape(self, n_tiles: int, n_out: int) -> Tuple[int, int, int, int]:
         n_a, n_w = self.spec.n_bits_a, self.spec.n_bits_w

@@ -244,6 +244,45 @@ def psq_matmul_dequant_reference(
 
 
 # ---------------------------------------------------------------------------
+# Values-only serving state (shared by kernels.ops and the serving cache)
+# ---------------------------------------------------------------------------
+
+def quantize_weights_for_serving(
+    w: jax.Array, params: Dict[str, jax.Array], cfg: QuantConfig
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """LSQ weight codes + dequantized fixed-point scale factors, values only.
+
+    Returns ``(w_int, s_w, sf_q)`` with every gradient stopped — the exact
+    tensors the integer-level kernels consume. Deriving them here (rather
+    than inline in each caller) guarantees the per-call kernel path and
+    the :class:`repro.serve.cache.PackedLayer` pack-once path stay
+    bit-identical by construction.
+
+    ``sf_q`` is broadcast up to ``T`` tiles on its leading axis (reduced
+    granularities keep size-1 trailing axes; the kernels broadcast those).
+    In ``adc`` mode a neutral all-ones tensor is returned so the kernel
+    signature stays uniform.
+    """
+    spec = cfg.spec
+    t = num_tiles(w.shape[0], cfg.xbar_rows)
+    w_int, s_w = quant.lsq_quantize_int(
+        w, params["step_w"], spec.w_qn, spec.w_qp,
+        g=quant.lsq_grad_factor(w.size, spec.w_qp),
+    )
+    w_int, s_w = sg(w_int), sg(s_w)
+    if cfg.mode == "psq":
+        sf_q_int, sl = quant.quantize_scale_factors_int(
+            params["sf"], params["sf_step"], spec.n_bits_sf
+        )
+        sf_q = sg(sf_q_int * sl)
+        if sf_q.shape[0] != t:  # per_layer granularity
+            sf_q = jnp.broadcast_to(sf_q, (t,) + sf_q.shape[1:])
+    else:
+        sf_q = jnp.ones((t, spec.n_bits_a, spec.n_bits_w, 1), jnp.float32)
+    return w_int, s_w, sf_q
+
+
+# ---------------------------------------------------------------------------
 # Parameter construction
 # ---------------------------------------------------------------------------
 

@@ -92,13 +92,17 @@ def apply_linear(
     cfg: QuantConfig,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """y = quantized_matmul(x, w) + b. Returns (y, stats)."""
+    if hasattr(params, "apply_serving"):
+        # PackedLayer (repro.serve.cache): weight-stationary packed state,
+        # quantized/packed once at model load — bias folded in there.
+        return params.apply_serving(x)
     if "w_packed" in params:  # int4 weight-stationary serving path
         y = _unpack_int4_matmul(x, params["w_packed"], params["w_scale"])
         stats: Dict[str, jax.Array] = {}
     elif not cfg.quantized:
         y = x @ params["w"].astype(x.dtype)
         stats = {}
-    elif cfg.use_kernel:
+    elif cfg.kernel_path:
         from repro.kernels import ops as kernel_ops
 
         y, stats = kernel_ops.psq_matmul(x, params["w"], params, cfg)

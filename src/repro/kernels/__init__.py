@@ -1,3 +1,18 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""HCiM kernel layer.
+
+``registry`` is the extension point: every implementation of the PSQ
+crossbar pipeline / int4 decode matmul registers there by name and the
+rest of the stack dispatches through it (see ``kernels/ops.py`` for the
+QAT-facing wrappers). Add new backends by calling
+:func:`repro.kernels.registry.register_backend`.
+"""
+from repro.kernels.registry import (  # noqa: F401
+    KernelBackend,
+    available_backends,
+    default_backend,
+    get_backend,
+    register_backend,
+    registered_backends,
+    resolve_backend,
+    set_default_backend,
+)

@@ -1,10 +1,12 @@
-"""Jitted wrappers binding the Pallas kernels into the QAT/serving APIs.
+"""Jitted wrappers binding the registered kernel backends into the
+QAT/serving APIs.
 
 ``psq_matmul`` — drop-in replacement for :func:`repro.core.psq.psq_matmul`
-(same signature, same values): forward runs the Pallas kernel, backward
-re-derives the straight-through gradients from the jnp reference
-semantics via a custom VJP (the standard recompute-in-backward pattern of
-fused kernels).
+(same signature, same values): forward runs the backend selected through
+:mod:`repro.kernels.registry` (``cfg.kernel_backend`` or the process
+default), backward re-derives the straight-through gradients from the jnp
+reference semantics via a custom VJP (the standard recompute-in-backward
+pattern of fused kernels).
 
 ``int4_matmul`` — weight-stationary deployment matmul for PSQ-trained
 weights (values only; serving path, no gradients needed).
@@ -12,7 +14,7 @@ weights (values only; serving path, no gradients needed).
 from __future__ import annotations
 
 import functools
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,47 +22,51 @@ import jax.numpy as jnp
 from repro.core import psq as psq_ref
 from repro.core import quant
 from repro.core.config import QuantConfig
-from repro.kernels.int4_matmul import int4_matmul_kernel, pack_int4
-from repro.kernels.psq_matmul import psq_matmul_kernel
+from repro.kernels import registry
+from repro.kernels.int4_matmul import pack_int4
 
 sg = jax.lax.stop_gradient
 
-_INTERPRET = True  # CPU container: Pallas runs in interpret mode
 
+def kernel_forward_values(
+    x: jax.Array,
+    w_int: jax.Array,
+    s_w: jax.Array,
+    sf_q: jax.Array,
+    alpha: jax.Array,
+    step_x: jax.Array,
+    cfg: QuantConfig,
+) -> jax.Array:
+    """Values-only HCiM forward from pre-derived weight-side state.
 
-def _kernel_forward(x, w, params, cfg: QuantConfig) -> jax.Array:
-    """Values-only HCiM forward through the Pallas kernel."""
+    The single activation-quantize -> backend -> rescale path shared by
+    the per-call QAT wrapper below and the pack-once serving cache
+    (:class:`repro.serve.cache.PackedLayer`) — one definition, so the two
+    paths cannot drift apart.
+    """
     spec = cfg.spec
+    backend = registry.resolve_backend(cfg)
     orig_shape = x.shape
     xf = x.reshape(-1, x.shape[-1])
-    x_int, s_x = quant.lsq_quantize_int(xf, params["step_x"], spec.a_qn, spec.a_qp)
-    w_int, s_w = quant.lsq_quantize_int(
-        w, params["step_w"], spec.w_qn, spec.w_qp,
-        g=quant.lsq_grad_factor(w.size, spec.w_qp),
-    )
-    x_int, w_int, s_x, s_w = sg(x_int), sg(w_int), sg(s_x), sg(s_w)
-
-    if cfg.mode == "psq":
-        sf_q_int, sl = quant.quantize_scale_factors_int(
-            params["sf"], params["sf_step"], spec.n_bits_sf
-        )
-        sf_q = sg(sf_q_int * sl)
-        t = psq_ref.num_tiles(x.shape[-1], cfg.xbar_rows)
-        if sf_q.shape[0] != t:  # per_layer granularity
-            sf_q = jnp.broadcast_to(sf_q, (t,) + sf_q.shape[1:])
-    else:
-        t = psq_ref.num_tiles(x.shape[-1], cfg.xbar_rows)
-        sf_q = jnp.ones((t, spec.n_bits_a, spec.n_bits_w, 1), jnp.float32)
-
-    y_int = psq_matmul_kernel(
-        x_int, w_int, sf_q, sg(params["alpha"]),
+    x_int, s_x = quant.lsq_quantize_int(xf, step_x, spec.a_qn, spec.a_qp)
+    x_int, s_x = sg(x_int), sg(s_x)
+    y_int = backend.psq_matmul(
+        x_int.astype(jnp.float32), w_int, sf_q, sg(alpha),
         n_a=spec.n_bits_a, n_w=spec.n_bits_w,
         levels=cfg.psq_levels if cfg.mode == "psq" else "adc",
         adc_bits=cfg.adc_bits, xbar_rows=cfg.xbar_rows,
-        interpret=_INTERPRET,
+        fuse_planes=cfg.fuse_planes,
     )
     y = y_int * s_x * jnp.reshape(s_w, (1, -1) if jnp.ndim(s_w) else ())
-    return y.reshape(orig_shape[:-1] + (w.shape[-1],))
+    return y.reshape(orig_shape[:-1] + (w_int.shape[-1],))
+
+
+def _kernel_forward(x, w, params, cfg: QuantConfig) -> jax.Array:
+    """Values-only HCiM forward, weight state re-derived per call (QAT)."""
+    w_int, s_w, sf_q = psq_ref.quantize_weights_for_serving(w, params, cfg)
+    return kernel_forward_values(
+        x, w_int, s_w, sf_q, params["alpha"], params["step_x"], cfg
+    )
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
@@ -85,19 +91,26 @@ _psq_matmul_kernel_qat.defvjp(_qat_fwd, _qat_bwd)
 def psq_matmul(
     x: jax.Array, w: jax.Array, params: Dict[str, jax.Array], cfg: QuantConfig
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Kernel-backed HCiM matmul with reference-derived QAT gradients."""
+    """Backend-dispatched HCiM matmul with reference-derived QAT gradients."""
     return _psq_matmul_kernel_qat(x, w, params, cfg), {}
 
 
 def int4_matmul(
-    x: jax.Array, w_packed: jax.Array, scale: jax.Array, **kw
+    x: jax.Array,
+    w_packed: jax.Array,
+    scale: jax.Array,
+    backend: Optional[str] = None,
+    **kw,
 ) -> jax.Array:
+    """Weight-stationary int4 matmul through a registered backend."""
+    if "interpret" in kw:  # legacy knob: map onto the backend names
+        backend = backend or ("pallas-interpret" if kw.pop("interpret")
+                              else "pallas")
+    impl = registry.get_backend(backend)
     orig_shape = x.shape
-    y = int4_matmul_kernel(
-        x.reshape(-1, x.shape[-1]), w_packed, scale,
-        interpret=kw.get("interpret", _INTERPRET),
-    )
+    y = impl.int4_matmul(x.reshape(-1, x.shape[-1]), w_packed, scale)
     return y.reshape(orig_shape[:-1] + (w_packed.shape[-1],))
 
 
-__all__ = ["psq_matmul", "int4_matmul", "pack_int4"]
+__all__ = ["psq_matmul", "int4_matmul", "pack_int4",
+           "kernel_forward_values"]

@@ -63,7 +63,8 @@ def psq_matmul_ref(
         p = jnp.where(a >= 0.0, 1.0, -1.0)
     sf_full = jnp.broadcast_to(sf_q, (t, n_a, n_w, o))
     y = 0.5 * jnp.einsum("j,k,jkbto,tjko->bo", sigma, kappa, p, sf_full)
-    c_w = float(jnp.sum(kappa))
+    # static two's-complement offset (== jnp.sum(kappa), but jit-safe)
+    c_w = sum(2.0 ** k for k in range(n_w - 1)) - 2.0 ** (n_w - 1)
     return y + 0.5 * c_w * jnp.sum(x_int, axis=-1, keepdims=True)
 
 

@@ -1,0 +1,216 @@
+"""Kernel backend registry — one dispatch point for the HCiM datapath.
+
+Every implementation of the integer-level PSQ pipeline (and of the int4
+weight-stationary decode matmul) registers here under a name; callers
+select a backend per call, per config (``QuantConfig.kernel_backend``) or
+process-wide (``set_default_backend`` / ``REPRO_KERNEL_BACKEND``), and
+the rest of the stack — ``kernels.ops``, ``core.psq_linear``, the serving
+cache, ``benchmarks/kernel_bench.py`` — never hard-codes an
+implementation again.
+
+Built-in backends:
+
+  reference        pure-jnp oracle (:mod:`repro.kernels.ref`) — bit-exact
+                   semantics, always available, the conformance baseline.
+  pallas-interpret Pallas kernels in interpret mode — runs anywhere
+                   (CPU containers included), exercises the real kernel
+                   code path minus Mosaic lowering.
+  pallas           compiled Pallas kernels — TPU/GPU only; the serving
+                   fast path.
+
+Backends expose two entry points with fixed signatures:
+
+  psq_matmul(x_int, w_int, sf_q, alpha, *, n_a, n_w, levels, adc_bits,
+             xbar_rows, fuse_planes=False) -> y_int        (B, O)
+  int4_matmul(x, w_packed, scale) -> y                     (B, O)
+
+``x_int``/``w_int`` are integer-valued f32 codes, ``sf_q`` the
+dequantized fixed-point scale factors broadcastable to
+``(T, n_a, n_w, O)`` — exactly the contract of
+:func:`repro.kernels.ref.psq_matmul_ref`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+__all__ = [
+    "KernelBackend",
+    "available_backends",
+    "default_backend",
+    "get_backend",
+    "register_backend",
+    "registered_backends",
+    "resolve_backend",
+    "set_default_backend",
+]
+
+_ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelBackend:
+    """A named implementation of the HCiM kernel contract."""
+
+    name: str
+    description: str
+    psq_matmul: Callable[..., jax.Array]
+    int4_matmul: Callable[..., jax.Array]
+    # availability is queried lazily: it can depend on jax.default_backend()
+    is_available: Callable[[], bool] = lambda: True
+
+    def require_available(self) -> "KernelBackend":
+        if not self.is_available():
+            raise RuntimeError(
+                f"kernel backend {self.name!r} is registered but not "
+                f"available on the {jax.default_backend()!r} platform "
+                f"(available: {available_backends()})"
+            )
+        return self
+
+
+_REGISTRY: Dict[str, KernelBackend] = {}
+_DEFAULT_NAME = "pallas-interpret"
+
+
+def register_backend(backend: KernelBackend) -> KernelBackend:
+    """Add (or replace) a backend; returns it so use as a statement or fn."""
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def registered_backends() -> List[str]:
+    """All registered backend names, available on this platform or not."""
+    return sorted(_REGISTRY)
+
+
+def available_backends() -> List[str]:
+    """Backend names runnable on the current JAX platform."""
+    return [n for n in sorted(_REGISTRY) if _REGISTRY[n].is_available()]
+
+
+def get_backend(name: Optional[str] = None) -> KernelBackend:
+    """Look up a backend by name (``None`` -> the process default).
+
+    Raises ``KeyError`` for unknown names and ``RuntimeError`` for
+    backends that cannot run on the current platform.
+    """
+    resolved = name or default_backend()
+    try:
+        backend = _REGISTRY[resolved]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel backend {resolved!r}; "
+            f"registered: {registered_backends()}"
+        ) from None
+    return backend.require_available()
+
+
+def set_default_backend(name: str) -> None:
+    """Process-wide default used when a config does not pin a backend."""
+    global _DEFAULT_NAME
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown kernel backend {name!r}; "
+            f"registered: {registered_backends()}"
+        )
+    _DEFAULT_NAME = name
+
+
+def default_backend() -> str:
+    """Env override (``REPRO_KERNEL_BACKEND``) beats the in-process default."""
+    return os.environ.get(_ENV_VAR) or _DEFAULT_NAME
+
+
+def resolve_backend(cfg) -> KernelBackend:
+    """Backend for a :class:`repro.core.config.QuantConfig`.
+
+    ``cfg.kernel_backend`` pins one explicitly; otherwise the process
+    default applies. Accepts any object with a ``kernel_backend``
+    attribute (or a plain name / None).
+    """
+    if cfg is None:
+        return get_backend(None)
+    if isinstance(cfg, str):
+        return get_backend(cfg)
+    return get_backend(getattr(cfg, "kernel_backend", None))
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends
+# ---------------------------------------------------------------------------
+
+def _reference_psq(x_int, w_int, sf_q, alpha, *, n_a, n_w, levels,
+                   adc_bits=7, xbar_rows=128, fuse_planes=False):
+    # fuse_planes is a Pallas MXU-occupancy knob; jnp semantics are
+    # plane-order independent so the oracle accepts and ignores it.
+    del fuse_planes
+    from repro.kernels.ref import psq_matmul_ref
+
+    return psq_matmul_ref(
+        x_int, w_int, sf_q, alpha,
+        n_a=n_a, n_w=n_w, levels=levels,
+        adc_bits=adc_bits, xbar_rows=xbar_rows,
+    )
+
+
+def _reference_int4(x, w_packed, scale):
+    from repro.kernels.ref import int4_matmul_ref
+
+    return int4_matmul_ref(w_packed, scale, x)
+
+
+def _pallas_psq(interpret: bool):
+    def call(x_int, w_int, sf_q, alpha, *, n_a, n_w, levels,
+             adc_bits=7, xbar_rows=128, fuse_planes=False):
+        from repro.kernels.psq_matmul import psq_matmul_kernel
+
+        return psq_matmul_kernel(
+            x_int, w_int, sf_q, alpha,
+            n_a=n_a, n_w=n_w, levels=levels, adc_bits=adc_bits,
+            xbar_rows=xbar_rows, fuse_planes=fuse_planes,
+            interpret=interpret,
+        )
+
+    return call
+
+
+def _pallas_int4(interpret: bool):
+    def call(x, w_packed, scale):
+        from repro.kernels.int4_matmul import int4_matmul_kernel
+
+        return int4_matmul_kernel(x, w_packed, scale, interpret=interpret)
+
+    return call
+
+
+def _compiled_pallas_available() -> bool:
+    # pallas_call only lowers through Mosaic/Triton on accelerators;
+    # CPU supports interpret mode exclusively.
+    return jax.default_backend() in ("tpu", "gpu", "cuda", "rocm")
+
+
+register_backend(KernelBackend(
+    name="reference",
+    description="pure-jnp bit-exact oracle (conformance baseline)",
+    psq_matmul=_reference_psq,
+    int4_matmul=_reference_int4,
+))
+
+register_backend(KernelBackend(
+    name="pallas-interpret",
+    description="Pallas kernels, interpreter (portable, correctness path)",
+    psq_matmul=_pallas_psq(interpret=True),
+    int4_matmul=_pallas_int4(interpret=True),
+))
+
+register_backend(KernelBackend(
+    name="pallas",
+    description="compiled Pallas kernels (TPU/GPU serving fast path)",
+    psq_matmul=_pallas_psq(interpret=False),
+    int4_matmul=_pallas_int4(interpret=False),
+    is_available=_compiled_pallas_available,
+))

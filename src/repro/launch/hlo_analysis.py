@@ -55,6 +55,40 @@ def _dims(s: str) -> List[int]:
     return [int(x) for x in s.split(",") if x] if s else []
 
 
+def _split_args(s: str) -> List[str]:
+    """Split an operand list on top-level commas only.
+
+    Modern XLA prints typed operands (``f32[512,512]{1,0} %arg``) whose
+    shape/layout brackets contain commas — a naive ``split(",")`` shreds
+    them and silently zeroes every downstream count.
+    """
+    parts: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    tail = "".join(cur).strip()
+    if tail:
+        parts.append(tail)
+    return [p for p in parts if p]
+
+
+def _arg_name(a: str) -> str:
+    """Operand name with any type annotation stripped: the ``%``-token."""
+    for tok in reversed(a.split()):
+        if tok.startswith("%"):
+            return tok.lstrip("%")
+    return a.split()[-1].lstrip("%") if a.split() else a
+
+
 def _prod(xs) -> int:
     n = 1
     for x in xs:
@@ -72,6 +106,10 @@ class Computation:
     coll: Dict[str, float] = dataclasses.field(default_factory=dict)
     while_calls: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
     fusion_calls: List[str] = dataclasses.field(default_factory=list)
+    # plain `call` ops (CPU thread-parallel wrappers etc.): the callee is a
+    # real computation whose ops touch HBM, so it is byte-counted itself
+    # and the call site is free — unlike fusions.
+    plain_calls: List[str] = dataclasses.field(default_factory=list)
     param_reads: Optional[List[float]] = None
 
 
@@ -110,7 +148,7 @@ def _compute_param_reads(c: Computation):
     symtab = _symtab(c)
 
     def op_bytes(name: str) -> float:
-        rec = symtab.get(name.lstrip("%"))
+        rec = symtab.get(_arg_name(name))
         return _prod(rec[1]) * _DTYPE_BYTES.get(rec[0], 4) if rec else 0.0
 
     param_names = [p[0] for p in _PARAM.findall(c.header)]
@@ -123,7 +161,7 @@ def _compute_param_reads(c: Computation):
         mo = _ARGS_OF_OP.search(line.split("=", 1)[1])
         if not mo:
             continue
-        args = [a.strip().lstrip("%") for a in mo.group(1).split(",")]
+        args = [_arg_name(a) for a in _split_args(mo.group(1))]
         is_slice = ("dynamic-slice(" in line or " gather(" in line)
         res_bytes = _prod(_dims(md.group(3))) * _DTYPE_BYTES.get(md.group(2), 4)
         for i, a in enumerate(args):
@@ -143,7 +181,7 @@ def _analyze_comp(c: Computation, comps: Dict[str, "Computation"]):
     symtab = _symtab(c)
 
     def op_bytes(name: str) -> float:
-        rec = symtab.get(name.lstrip("%"))
+        rec = symtab.get(_arg_name(name))
         return _prod(rec[1]) * _DTYPE_BYTES.get(rec[0], 4) if rec else 0.0
 
     for line in c.lines:
@@ -155,12 +193,13 @@ def _analyze_comp(c: Computation, comps: Dict[str, "Computation"]):
             ma = _DOT_ARGS.search(line)
             lhs: List[int] = []
             if ma:
-                first = ma.group(1).split(",")[0].strip()
+                dot_args = _split_args(ma.group(1))
+                first = dot_args[0] if dot_args else ""
                 mt = _TYPE.match(first)
                 if mt:
                     lhs = _dims(mt.group(2))
                 else:
-                    rec = symtab.get(first.lstrip("%"))
+                    rec = symtab.get(_arg_name(first))
                     lhs = rec[1] if rec else []
             cdims = _dims(mc.group(1)) if mc else []
             if lhs and cdims:
@@ -174,11 +213,9 @@ def _analyze_comp(c: Computation, comps: Dict[str, "Computation"]):
             )
             rhs = line.split("=", 1)[1]
             mo = _ARGS_OF_OP.search(rhs)
-            args = (
-                [a.strip() for a in mo.group(1).split(",") if a.strip()]
-                if mo else []
-            )
-            if " while(" in line or " conditional(" in line:
+            args = _split_args(mo.group(1)) if mo else []
+            if (" while(" in line or " conditional(" in line
+                    or " call(" in line):
                 pass  # carried state is aliased; bodies account their io
             elif "dynamic-slice(" in line or " gather(" in line:
                 c.io_bytes += 2.0 * res_bytes  # read slice + write result
@@ -224,7 +261,13 @@ def _analyze_comp(c: Computation, comps: Dict[str, "Computation"]):
             mc2 = _COND_REF.search(line)
             if mb and mc2:
                 c.while_calls.append((mb.group(1), mc2.group(1)))
+        elif " call(" in line:
+            mf = _FUSION_REF.search(line)
+            if mf:
+                c.plain_calls.append(mf.group(1))
         else:
+            # fusions, and to_apply-carrying ops (reduce/scatter/map):
+            # internals stay on-chip, only flops are real
             mf = _FUSION_REF.search(line)
             if mf:
                 c.fusion_calls.append(mf.group(1))
@@ -274,6 +317,9 @@ def analyze(hlo: str, entry: Optional[str] = None) -> Dict[str, float]:
         for sub in c.fusion_calls:
             # fusion internals: MXU flops are real, HBM bytes are not
             visit(sub, mult, False)
+        for sub in c.plain_calls:
+            # real sub-computations: their ops touch HBM themselves
+            visit(sub, mult, count_bytes)
         stack.pop()
 
     visit(entry, 1.0, True)

@@ -1,21 +1,27 @@
 """Serving launcher: batched prefill/decode on the available devices.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
-        --requests 8 [--int4]
+        --requests 8 [--int4 | --psq-packed] [--backend reference]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import numpy as np
 
 from repro.configs import get_config, list_archs
+from repro.core.config import PSQ_TERNARY
 from repro.core.psq_linear import pack_tree_for_serving
+from repro.kernels import registry
 from repro.launch.mesh import make_host_mesh
 from repro.models import init_model
 from repro.parallel.sharding import RULES_2D, axis_rules
-from repro.serve import EngineConfig, ServeEngine, throughput_stats
+from repro.serve import (
+    EngineConfig, PackedModelCache, ServeEngine, pack_tree_psq,
+    throughput_stats,
+)
 
 
 def main():
@@ -26,11 +32,30 @@ def main():
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--int4", action="store_true",
                     help="serve int4-packed PSQ deployment weights")
+    ap.add_argument("--psq-packed", action="store_true",
+                    help="serve the full HCiM pipeline from the "
+                         "weight-stationary PackedLayer cache")
+    ap.add_argument("--backend", default=None,
+                    choices=registry.registered_backends(),
+                    help="kernel backend for --psq-packed "
+                         "(default: 'reference' on CPU)")
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
-    params = init_model(jax.random.PRNGKey(0), cfg)
+    if args.psq_packed:
+        backend = args.backend or (
+            "reference" if jax.default_backend() == "cpu" else "pallas"
+        )
+        qcfg = dataclasses.replace(PSQ_TERNARY, kernel_backend=backend)
+        cfg = cfg.with_quant(qcfg)
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        cache = PackedModelCache()
+        params = pack_tree_psq(params, qcfg, cache)
+        print(f"[serve] packed {cache.stats()['layers']} layers once "
+              f"(backend={backend})")
+    else:
+        params = init_model(jax.random.PRNGKey(0), cfg)
     if args.int4:
         params = pack_tree_for_serving(params)
 
@@ -53,7 +78,8 @@ def main():
                        max_new_tokens=args.max_new_tokens)
         done = eng.run()
     stats = throughput_stats(done)
-    print(f"[serve] {args.arch} int4={args.int4}: {stats}")
+    mode = "psq-packed" if args.psq_packed else ("int4" if args.int4 else "fp")
+    print(f"[serve] {args.arch} mode={mode}: {stats}")
 
 
 if __name__ == "__main__":

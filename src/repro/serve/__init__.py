@@ -1,2 +1,12 @@
 """Batched serving engine (prefill/decode, KV caches, PSQ int4 path)."""
-from repro.serve.engine import EngineConfig, Request, ServeEngine, throughput_stats
+from repro.serve.cache import (  # noqa: F401
+    PackedLayer,
+    PackedModelCache,
+    pack_tree_psq,
+)
+from repro.serve.engine import (  # noqa: F401
+    EngineConfig,
+    Request,
+    ServeEngine,
+    throughput_stats,
+)

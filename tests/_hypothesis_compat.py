@@ -1,0 +1,54 @@
+"""Optional-``hypothesis`` shim so the suite always collects.
+
+Property-based tests import ``given``/``settings``/``st`` from here
+instead of from ``hypothesis`` directly. With hypothesis installed
+(CI: ``pip install -r requirements-dev.txt``) this re-exports the real
+thing; without it, every ``@given`` test collects normally and skips
+with an explanatory message, and the rest of the module's tests run.
+"""
+try:
+    from hypothesis import HealthCheck, assume, given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in bare containers
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Chainable stand-in: every attribute/call/composition returns
+        itself, so module-level strategy expressions still evaluate."""
+
+        def __getattr__(self, _name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _AnyStrategy()
+    HealthCheck = _AnyStrategy()
+
+    def assume(_condition=True):
+        return True
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # deliberately no functools.wraps: __wrapped__ would leak the
+            # original signature and pytest would demand its argument
+            # names as fixtures. A bare *args fn requests none.
+            def skipper(*a, **k):
+                pytest.skip("hypothesis not installed "
+                            "(pip install -r requirements-dev.txt)")
+
+            skipper.__name__ = getattr(fn, "__name__", "test")
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco

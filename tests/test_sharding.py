@@ -25,7 +25,7 @@ class TestLogicalRules:
         assert spec == P("data", None, "model")
 
     def test_divisibility_guard(self):
-        mesh = jax.sharding.AbstractMesh((1, 2), ("data", "model"))
+        mesh = jax.sharding.AbstractMesh((("data", 1), ("model", 2)))
         with axis_rules(RULES_2D, mesh):
             # 7 not divisible by model=2 -> unsharded
             spec = logical_to_pspec(["batch", "ffn"], shape=(4, 7))
@@ -33,7 +33,7 @@ class TestLogicalRules:
 
     def test_duplicate_axis_dedup(self):
         """Two logical dims mapping to the same mesh axis: first wins."""
-        mesh = jax.sharding.AbstractMesh((1, 2), ("data", "model"))
+        mesh = jax.sharding.AbstractMesh((("data", 1), ("model", 2)))
         with axis_rules(RULES_2D, mesh):
             spec = logical_to_pspec(
                 ["experts", None, "expert_ffn"], shape=(4, 2, 8)
@@ -78,7 +78,7 @@ class TestParamSpecs:
             def __init__(self, key):
                 self.key = key
 
-        mesh = jax.sharding.AbstractMesh((1, 2), ("data", "model"))
+        mesh = jax.sharding.AbstractMesh((("data", 1), ("model", 2)))
         # 128 experts divisible by 2 -> EP
         spec = param_pspec([K("moe"), K("w_gate")], Leaf((35, 128, 64, 32)),
                            mesh)
