@@ -1,5 +1,5 @@
-"""Batched serving demo: prefill + decode with KV caches, across the
-three deployment formats —
+"""Continuous-batching serving demo: slot-pool prefill + decode with KV
+caches, across the three deployment formats —
 
   * fp32 master weights,
   * int4-packed weights (two 4-bit codes per byte — the TPU analogue of
@@ -7,6 +7,12 @@ three deployment formats —
   * the full HCiM PSQ pipeline served from the PackedLayer cache:
     weights quantized, int4 planes packed and scale factors precomputed
     ONCE at load, reused across every request.
+
+Each engine runs the SAME mixed-length workload through the
+continuous-batching scheduler (per-step retirement, mid-flight slot
+admission — see docs/serving.md); pass mode="static" to EngineConfig for
+the classic drain-the-queue loop. Demo timings include compilation —
+benchmarks/serve_bench.py measures the warmed steady state.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
@@ -25,28 +31,33 @@ from repro.serve import (
 )
 
 
-def run_engine(label, params, cfg, rng):
+def run_engine(label, params, cfg, mode="auto"):
+    # fresh seeded RNG per engine: every format/scheduler decodes the
+    # SAME workload, so the printed numbers compare apples to apples
+    rng = np.random.RandomState(0)
     eng = ServeEngine(params, cfg, EngineConfig(max_batch=4, max_len=64,
-                                                temperature=0.7))
+                                                temperature=0.7, mode=mode))
     for _ in range(8):
         prompt = rng.randint(0, cfg.vocab_size, size=rng.randint(4, 12))
-        eng.submit(prompt, max_new_tokens=12)
+        eng.submit(prompt, max_new_tokens=int(rng.randint(4, 13)))
     done = eng.run()
     stats = throughput_stats(done)
+    sched = eng.stats()
     nbytes = sum(x.nbytes for x in jax.tree.leaves(params))
-    print(f"{label:22s}: {stats['requests']} reqs, "
+    print(f"{label:26s}: {stats['requests']} reqs, "
           f"{stats['total_tokens']} tokens, "
           f"{stats['tokens_per_s']:.1f} tok/s, "
-          f"weights {nbytes / 1e6:.1f} MB")
+          f"occupancy {sched['mean_slot_occupancy']:.2f} "
+          f"({sched['mode']}), weights {nbytes / 1e6:.1f} MB")
 
 
 def main():
     cfg = get_config("tinyllama-1.1b").reduced()
     params = init_model(jax.random.PRNGKey(0), cfg)
-    rng = np.random.RandomState(0)
 
-    run_engine("fp32 weights", params, cfg, rng)
-    run_engine("int4-packed weights", pack_tree_for_serving(params), cfg, rng)
+    run_engine("fp32 weights", params, cfg)
+    run_engine("fp32 weights (static)", params, cfg, mode="static")
+    run_engine("int4-packed weights", pack_tree_for_serving(params), cfg)
 
     # Full HCiM pipeline from the weight-stationary cache. The 'reference'
     # backend is the fast jnp path on CPU; on TPU pass 'pallas'.
@@ -57,7 +68,7 @@ def main():
     cache = PackedModelCache()
     packed = pack_tree_psq(psq_params, qcfg, cache)
     print(f"packed once at load: {cache.stats()}")
-    run_engine("psq PackedLayer cache", packed, psq_cfg, rng)
+    run_engine("psq PackedLayer cache", packed, psq_cfg)
 
 
 if __name__ == "__main__":

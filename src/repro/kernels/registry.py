@@ -28,6 +28,15 @@ Backends expose two entry points with fixed signatures:
 dequantized fixed-point scale factors broadcastable to
 ``(T, n_a, n_w, O)`` — exactly the contract of
 :func:`repro.kernels.ref.psq_matmul_ref`.
+
+Example — look up the conformance oracle and check what's registered:
+
+    >>> from repro.kernels import registry
+    >>> registry.get_backend("reference").name
+    'reference'
+    >>> all(b in registry.registered_backends()
+    ...     for b in ("reference", "pallas-interpret", "pallas"))
+    True
 """
 from __future__ import annotations
 
@@ -77,18 +86,43 @@ _DEFAULT_NAME = "pallas-interpret"
 
 
 def register_backend(backend: KernelBackend) -> KernelBackend:
-    """Add (or replace) a backend; returns it so use as a statement or fn."""
+    """Add (or replace) a backend; returns it so use as a statement or fn.
+
+    A new implementation only has to satisfy the two-entry-point
+    contract; the conformance suite and ``benchmarks/kernel_bench.py``
+    pick it up automatically::
+
+        register_backend(KernelBackend(
+            name="my-backend",
+            description="what it is",
+            psq_matmul=my_psq_matmul,
+            int4_matmul=my_int4_matmul,
+        ))
+    """
     _REGISTRY[backend.name] = backend
     return backend
 
 
 def registered_backends() -> List[str]:
-    """All registered backend names, available on this platform or not."""
+    """All registered backend names, available on this platform or not.
+
+    >>> "reference" in registered_backends()
+    True
+    """
     return sorted(_REGISTRY)
 
 
 def available_backends() -> List[str]:
-    """Backend names runnable on the current JAX platform."""
+    """Backend names runnable on the current JAX platform.
+
+    Always a subset of :func:`registered_backends`; the ``reference``
+    oracle is available everywhere.
+
+    >>> set(available_backends()) <= set(registered_backends())
+    True
+    >>> "reference" in available_backends()
+    True
+    """
     return [n for n in sorted(_REGISTRY) if _REGISTRY[n].is_available()]
 
 
@@ -97,6 +131,13 @@ def get_backend(name: Optional[str] = None) -> KernelBackend:
 
     Raises ``KeyError`` for unknown names and ``RuntimeError`` for
     backends that cannot run on the current platform.
+
+    >>> get_backend("reference").name
+    'reference'
+    >>> get_backend("no-such-backend")  # doctest: +IGNORE_EXCEPTION_DETAIL
+    Traceback (most recent call last):
+        ...
+    KeyError: unknown kernel backend 'no-such-backend'
     """
     resolved = name or default_backend()
     try:
@@ -110,7 +151,19 @@ def get_backend(name: Optional[str] = None) -> KernelBackend:
 
 
 def set_default_backend(name: str) -> None:
-    """Process-wide default used when a config does not pin a backend."""
+    """Process-wide default used when a config does not pin a backend.
+
+    (``REPRO_KERNEL_BACKEND`` in the environment still beats this — the
+    example sets it aside to show the in-process value, then restores.)
+
+    >>> import os
+    >>> saved = os.environ.pop("REPRO_KERNEL_BACKEND", None)
+    >>> set_default_backend("reference")
+    >>> default_backend()
+    'reference'
+    >>> set_default_backend("pallas-interpret")   # restore the built-in
+    >>> if saved is not None: os.environ["REPRO_KERNEL_BACKEND"] = saved
+    """
     global _DEFAULT_NAME
     if name not in _REGISTRY:
         raise KeyError(
@@ -121,7 +174,14 @@ def set_default_backend(name: str) -> None:
 
 
 def default_backend() -> str:
-    """Env override (``REPRO_KERNEL_BACKEND``) beats the in-process default."""
+    """Env override (``REPRO_KERNEL_BACKEND``) beats the in-process default.
+
+    >>> import os
+    >>> saved = os.environ.pop("REPRO_KERNEL_BACKEND", None)
+    >>> default_backend() in registered_backends()
+    True
+    >>> if saved is not None: os.environ["REPRO_KERNEL_BACKEND"] = saved
+    """
     return os.environ.get(_ENV_VAR) or _DEFAULT_NAME
 
 
@@ -131,6 +191,14 @@ def resolve_backend(cfg) -> KernelBackend:
     ``cfg.kernel_backend`` pins one explicitly; otherwise the process
     default applies. Accepts any object with a ``kernel_backend``
     attribute (or a plain name / None).
+
+    >>> import os
+    >>> saved = os.environ.pop("REPRO_KERNEL_BACKEND", None)
+    >>> resolve_backend("reference").name
+    'reference'
+    >>> resolve_backend(None).name == default_backend()
+    True
+    >>> if saved is not None: os.environ["REPRO_KERNEL_BACKEND"] = saved
     """
     if cfg is None:
         return get_backend(None)

@@ -1,7 +1,12 @@
-"""Serving launcher: batched prefill/decode on the available devices.
+"""Serving launcher: continuous-batching prefill/decode on the devices.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
-        --requests 8 [--int4 | --psq-packed] [--backend reference]
+        --requests 8 [--int4 | --psq-packed] [--backend reference] \
+        [--slots 4] [--mode auto|continuous|static]
+
+KV-cache families serve through the continuous-batching slot pool
+(per-step retirement + mid-flight admission, see docs/serving.md);
+recurrent/side-input families fall back to static batching.
 """
 from __future__ import annotations
 
@@ -40,6 +45,12 @@ def main():
                     help="kernel backend for --psq-packed "
                          "(default: 'reference' on CPU)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slot-pool size (static: batch size)")
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "continuous", "static"],
+                    help="scheduler: continuous batching (KV families) "
+                         "or the static drain-the-queue loop")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -69,8 +80,8 @@ def main():
     with mesh, axis_rules(RULES_2D, mesh):
         eng = ServeEngine(
             params, cfg,
-            EngineConfig(max_batch=4, max_len=args.max_len,
-                         temperature=args.temperature),
+            EngineConfig(max_batch=args.slots, max_len=args.max_len,
+                         temperature=args.temperature, mode=args.mode),
             extra_inputs=extra,
         )
         for _ in range(args.requests):
@@ -78,8 +89,9 @@ def main():
                        max_new_tokens=args.max_new_tokens)
         done = eng.run()
     stats = throughput_stats(done)
-    mode = "psq-packed" if args.psq_packed else ("int4" if args.int4 else "fp")
-    print(f"[serve] {args.arch} mode={mode}: {stats}")
+    fmt = "psq-packed" if args.psq_packed else ("int4" if args.int4 else "fp")
+    print(f"[serve] {args.arch} weights={fmt} scheduler={eng.stats()}")
+    print(f"[serve] {args.arch} weights={fmt}: {stats}")
 
 
 if __name__ == "__main__":

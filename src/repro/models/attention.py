@@ -227,9 +227,16 @@ def decode_attention(
     (measured 40x the necessary decode traffic — EXPERIMENTS.md §Perf);
     the caller instead commits all layers' (k_new, v_new) with ONE tiny
     dynamic-update-slice after the scan.
+
+    ``cache["length"]`` may be a scalar (uniform batch, the classic
+    static path) or an ``(B,)`` vector of per-row lengths (the
+    continuous-batching slot pool): masking, RoPE positions and cache
+    writes are all per-row in the vector case.
     """
     b = x.shape[0]
-    pos = jnp.broadcast_to(cache["length"][None], (b, 1))
+    length = cache["length"]
+    lv = jnp.broadcast_to(length, (b,)) if jnp.ndim(length) == 0 else length
+    pos = lv[:, None]
     q, k_new, v_new, stats = _project_qkv(p, x, cfg, quant, pos)
     k, v = cache["k"], cache["v"]
     s_kv = k.shape[1]
@@ -242,10 +249,10 @@ def decode_attention(
         preferred_element_type=jnp.float32,
     )
     kpos = jnp.arange(s_kv)
-    valid = kpos[None, :] < cache["length"]          # past tokens only
+    valid = kpos[None, :] < lv[:, None]              # past tokens only
     if cfg.sliding_window > 0:
-        valid &= kpos[None, :] > cache["length"] - cfg.sliding_window
-    logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+        valid &= kpos[None, :] > lv[:, None] - cfg.sliding_window
+    logits = jnp.where(valid[:, None, None, None], logits, NEG_INF)
     # the new token's own k as an explicit extra column
     logit_new = jnp.einsum(
         "bskgd,btkd->bkgst", qh.astype(k_new.dtype),
@@ -267,13 +274,20 @@ def decode_attention(
     stats.update(st)
     if defer_update:
         return y, (k_new, v_new), stats
-    k = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k_new.astype(cache["k"].dtype), cache["length"], axis=1
-    )
-    v = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v_new.astype(cache["v"].dtype), cache["length"], axis=1
-    )
-    new_cache = {"k": k, "v": v, "length": cache["length"] + 1}
+    if jnp.ndim(length) == 0:
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), length, axis=1
+        )
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), length, axis=1
+        )
+    else:
+        write = jax.vmap(
+            lambda c, u, l: jax.lax.dynamic_update_slice(c, u, (l, 0, 0))
+        )
+        k = write(cache["k"], k_new.astype(cache["k"].dtype), lv)
+        v = write(cache["v"], v_new.astype(cache["v"].dtype), lv)
+    new_cache = {"k": k, "v": v, "length": length + 1}
     return y, new_cache, stats
 
 

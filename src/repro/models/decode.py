@@ -47,9 +47,14 @@ def _kv_zeros(n: int, batch: int, max_len: int, cfg: ArchConfig,
               dtype, long_ctx: bool) -> Dict:
     seq_ax = "long_kv_seq" if long_ctx else "kv_seq"
     shape = (n, batch, max_len, cfg.n_kv_heads, cfg.resolved_head_dim)
-    z = jnp.zeros(shape, dtype)
-    z = constrain(z, None, "batch", seq_ax, "kv_heads", "head_dim")
-    return {"k": z, "v": z}
+
+    def z():
+        # distinct buffers for k and v: a shared zeros array would be the
+        # same buffer twice in a donated cache (serve engine donation)
+        return constrain(jnp.zeros(shape, dtype),
+                         None, "batch", seq_ax, "kv_heads", "head_dim")
+
+    return {"k": z(), "v": z()}
 
 
 def _stack_cache(init_one, n: int):
@@ -100,17 +105,83 @@ def init_cache(
 
 
 # ---------------------------------------------------------------------------
+# slot-indexed batch caches (continuous batching)
+# ---------------------------------------------------------------------------
+
+def cache_init(
+    params: Params, cfg: ArchConfig, n_slots: int, max_len: int,
+    dtype=jnp.bfloat16,
+) -> Dict:
+    """A decode-slot pool: :func:`init_cache` with per-slot lengths.
+
+    The returned cache is shaped exactly like the static one except
+    ``cache["length"]`` is an ``(n_slots,)`` int32 vector, so each slot
+    advances independently — :func:`decode_step` masks, positions and
+    writes per slot. Fresh slots start at length 0; admit a request with
+    :func:`cache_insert`.
+    """
+    cache = init_cache(params, cfg, n_slots, max_len, dtype=dtype)
+    cache["length"] = jnp.zeros((n_slots,), jnp.int32)
+    return cache
+
+
+def cache_insert(dst: Dict, src: Dict, row, slot, length) -> Dict:
+    """Scatter row ``row`` of a prefilled cache into ``slot`` of a live pool.
+
+    ``src`` is the cache returned by :func:`prefill` over a (bucketed)
+    prompt batch; ``dst`` is a :func:`cache_init` pool mid-decode. Every
+    stacked cache leaf has the batch axis at position 1, so one generic
+    dynamic-update-slice per leaf moves the new request's state in; the
+    prompt axis of ``src`` may be shorter than the pool's ``max_len``
+    (only the prefilled prefix is copied). ``length`` is the request's
+    TRUE prompt length — positions beyond it in ``src`` are right-pad
+    junk that stays masked (and is progressively overwritten by decode
+    writes, which land exactly at the slot's length).
+
+    ``row``/``slot``/``length`` may be traced scalars: under ``jax.jit``
+    this op is shape-stable across admissions (one compile per prefill
+    bucket shape).
+    """
+    def ins(d, s_leaf):
+        chunk = jax.lax.dynamic_slice_in_dim(s_leaf, row, 1, axis=1)
+        start = (0, slot) + (0,) * (d.ndim - 2)
+        return jax.lax.dynamic_update_slice(d, chunk.astype(d.dtype), start)
+
+    out = {
+        k: jax.tree.map(ins, dst[k], src[k])
+        for k in dst if k != "length"
+    }
+    out["length"] = dst["length"].at[slot].set(
+        jnp.asarray(length, dst["length"].dtype))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # decode step
 # ---------------------------------------------------------------------------
 
 def _commit_kv(kv, upd, length):
     """Write all layers' new-token K/V with ONE tiny in-place update
-    (never rewrite the stacked cache inside the layer scan)."""
+    (never rewrite the stacked cache inside the layer scan).
+
+    ``length`` scalar: one write position for the whole batch.
+    ``length`` (B,) vector: per-slot positions (continuous batching) —
+    vmapped over the batch axis so each slot lands at its own offset.
+    """
+    if jnp.ndim(length) == 0:
+        return {
+            "k": jax.lax.dynamic_update_slice(
+                kv["k"], upd["k_new"], (0, 0, length, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(
+                kv["v"], upd["v_new"], (0, 0, length, 0, 0)),
+        }
+    write = jax.vmap(
+        lambda c, u, l: jax.lax.dynamic_update_slice(c, u, (0, l, 0, 0)),
+        in_axes=(1, 1, 0), out_axes=1,
+    )
     return {
-        "k": jax.lax.dynamic_update_slice(
-            kv["k"], upd["k_new"], (0, 0, length, 0, 0)),
-        "v": jax.lax.dynamic_update_slice(
-            kv["v"], upd["v_new"], (0, 0, length, 0, 0)),
+        "k": write(kv["k"], upd["k_new"], length),
+        "v": write(kv["v"], upd["v_new"], length),
     }
 
 
@@ -157,7 +228,13 @@ def _attn_decode_one(lp, x, kv, length, cfg: ArchConfig, params=None,
 def decode_step(
     params: Params, cfg: ArchConfig, token: jax.Array, cache: Dict
 ) -> Tuple[jax.Array, Dict]:
-    """One serving step: token (B,1) -> (logits (B,1,V), updated cache)."""
+    """One serving step: token (B,1) -> (logits (B,1,V), updated cache).
+
+    Works on both cache flavors: a scalar ``length`` advances the whole
+    batch in lockstep (static batching), an ``(B,)`` vector advances each
+    slot at its own position (continuous batching via :func:`cache_init`
+    / :func:`cache_insert`) — masking, RoPE and K/V writes are per-slot.
+    """
     q = cfg.quant
     length = cache["length"]
     x = L.apply_embedding(params["embed"], token)

@@ -1,4 +1,8 @@
-"""Batched serving engine (prefill/decode, KV caches, PSQ int4 path)."""
+"""Serving: continuous-batching engine + weight-stationary PSQ cache.
+
+See docs/serving.md for the engine lifecycle (submit -> bucketed prefill
+-> slot admission -> per-step retirement) and the backend matrix.
+"""
 from repro.serve.cache import (  # noqa: F401
     PackedLayer,
     PackedModelCache,

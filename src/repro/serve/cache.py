@@ -24,6 +24,22 @@ Packed per layer (values only, gradients stopped):
   sigma     f32 (n_a,)       input bit-stream significances
   kappa     f32 (n_w,)       weight bit-slice significances
   bias      f32 (O,) | None
+
+Example — pack a tiny layer once and serve from the cached state:
+
+    >>> import jax
+    >>> from repro.core.config import QuantConfig
+    >>> from repro.core.psq_linear import init_linear
+    >>> from repro.serve.cache import PackedLayer
+    >>> cfg = QuantConfig(mode="psq", xbar_rows=32,
+    ...                   kernel_backend="reference")
+    >>> params = init_linear(jax.random.PRNGKey(0), 8, 4, cfg)
+    >>> layer = PackedLayer.pack(params, cfg)      # the one-time work
+    >>> layer.w_codes.shape
+    (8, 4)
+    >>> y, _ = layer.apply_serving(jax.numpy.ones((2, 8)))
+    >>> y.shape
+    (2, 4)
 """
 from __future__ import annotations
 
@@ -186,6 +202,20 @@ class PackedModelCache:
     invariant the serving path (and its test) relies on. Packing a tree
     with *changed* weights under the same paths re-packs (fingerprint
     mismatch), never serves stale state.
+
+    >>> import jax
+    >>> from repro.core.config import QuantConfig
+    >>> from repro.core.psq_linear import init_linear
+    >>> cfg = QuantConfig(mode="psq", xbar_rows=32,
+    ...                   kernel_backend="reference")
+    >>> tree = {"mlp": init_linear(jax.random.PRNGKey(0), 8, 4, cfg)}
+    >>> cache = PackedModelCache()
+    >>> packed = pack_tree_psq(tree, cfg, cache)
+    >>> cache.stats()
+    {'layers': 1, 'packs': 1, 'hits': 0}
+    >>> _ = pack_tree_psq(tree, cfg, cache)        # reload: no re-pack
+    >>> cache.stats()
+    {'layers': 1, 'packs': 1, 'hits': 1}
     """
 
     def __init__(self):
@@ -225,6 +255,15 @@ def pack_tree_psq(
     Embeddings, norms and non-linear leaves pass through untouched. Pass
     the same ``cache`` on subsequent loads (weight reload, engine restart
     on identical params) to reuse packed state instead of re-deriving it.
+
+    Requires a quantized config — packing an fp tree is a bug, not a
+    no-op:
+
+    >>> from repro.core.config import QuantConfig
+    >>> pack_tree_psq({}, QuantConfig(mode="none"))
+    Traceback (most recent call last):
+        ...
+    ValueError: pack_tree_psq needs a quantized QuantConfig (mode='none')
     """
     if not cfg.quantized:
         raise ValueError("pack_tree_psq needs a quantized QuantConfig "

@@ -1,23 +1,39 @@
-"""Batched serving engine: prefill + decode with KV caches.
+"""Continuous-batching serving engine: slot pool + bucketed prefill.
 
-Small-scale-runnable (CPU) but structured like a real engine:
+Small-scale-runnable (CPU) but structured like a real engine. Two
+scheduling modes share one API:
 
-  * requests enter a queue; the scheduler forms batches of equal padded
-    prompt length (static batching with bucketing),
-  * ``prefill`` processes the prompt batch in parallel and fills the
-    caches; ``decode`` steps advance all sequences one token per call,
-  * finished sequences (EOS or max tokens) retire; their slots back-fill
-    from the queue at the next prefill boundary (continuous-batching
-    lite),
-  * PSQ-trained models can serve through the int4 weight-stationary
-    kernel (``pack_psq_weights`` + quant mode on the config) — the HCiM
-    deployment story on TPU.
+``continuous`` (default for KV-cache families)
+  * a fixed pool of ``max_batch`` decode slots runs one ``decode_step``
+    per iteration over the WHOLE pool — per-slot lengths in the stacked
+    KV cache (``models.decode.cache_init``) keep every slot at its own
+    position,
+  * finished sequences (EOS or max tokens) retire at every decode step,
+    freeing their slot immediately,
+  * queued requests are admitted into free slots at decode-step
+    boundaries: prompts are right-padded to a power-of-two length bucket,
+    prefilled as a batch, and each row's prefilled cache is scattered
+    into its slot (``models.decode.cache_insert``),
+  * all shapes are fixed after warm-up — the decode step compiles once,
+    prefill/insert compile once per (bucket length, bucket batch) pair,
+    and nothing recompiles afterwards (asserted by the tier-1 suite).
+
+``static`` (fallback for recurrent-state and side-input families)
+  * the classic drain-the-queue loop: batches of equal padded prompt
+    length prefill together and decode in lockstep until every member
+    finishes. Exact for SSM/xLSTM/hybrid states (whose prefill cannot
+    skip pad tokens) and for encdec/VLM side inputs.
+
+PSQ-trained models serve through either mode from the weight-stationary
+``PackedLayer`` cache (``serve.cache.pack_tree_psq``) — quantize + pack
+once at load, stream activations past the packed state on every step:
+the HCiM deployment story on TPU.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +43,12 @@ from repro.configs.base import ArchConfig
 from repro.models import decode as D
 
 PyTree = Any
+
+# families whose decode state is a pure KV cache: prefill over a
+# right-padded prompt is exact (causal mask), so slots can be admitted
+# mid-flight. Recurrent families (ssm/hybrid) fold pad tokens into their
+# state; encdec needs per-request encoder output — those serve static.
+_CONTINUOUS_FAMILIES = ("dense", "moe", "vlm")
 
 
 @dataclasses.dataclass
@@ -41,17 +63,34 @@ class Request:
     t_enqueue: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
+    slot: int = -1                # decode slot served in (continuous mode)
 
 
 @dataclasses.dataclass
 class EngineConfig:
-    max_batch: int = 8
-    max_len: int = 256
+    max_batch: int = 8            # decode slot-pool size (static: batch size)
+    max_len: int = 256            # KV capacity per slot
     temperature: float = 0.0      # 0 => greedy
     seed: int = 0
+    mode: str = "auto"            # auto | continuous | static
+    prefill_batch: int = 4        # max requests per bucketed prefill call
+    min_bucket: int = 8           # smallest prompt-length bucket
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
 
 
 class ServeEngine:
+    """Submit prompts, then :meth:`run` to completion.
+
+    ``stats()`` exposes scheduler counters (decode steps, prefill calls,
+    mean slot occupancy) on top of :func:`throughput_stats`.
+    """
+
     def __init__(self, params: PyTree, cfg: ArchConfig, ecfg: EngineConfig,
                  extra_inputs: Optional[Dict[str, np.ndarray]] = None):
         self.params = params
@@ -62,32 +101,208 @@ class ServeEngine:
         self.finished: List[Request] = []
         self._uid = 0
         self._key = jax.random.PRNGKey(ecfg.seed)
+        self.mode = self._resolve_mode()
 
-        self._prefill = jax.jit(
+        # scheduler telemetry (continuous mode)
+        self.decode_steps = 0
+        self.prefill_calls = 0
+        self.step_occupancy: List[float] = []
+        self.admissions: List[Dict[str, int]] = []   # {step, uid, slot}
+
+        # static path: prefill allocates the full decode-capacity cache
+        self._prefill_full = jax.jit(
             lambda p, b: D.prefill(p, cfg, b, ecfg.max_len, dtype=jnp.float32)
         )
-        self._decode = jax.jit(
-            lambda p, tok, cache: D.decode_step(p, cfg, tok, cache)
+        # continuous path: prefill only covers the prompt bucket — the
+        # rows are scattered into the long-lived slot cache afterwards
+        self._prefill_bucket = jax.jit(
+            lambda p, toks: D.prefill(
+                p, cfg, {"tokens": toks}, toks.shape[1], dtype=jnp.float32
+            )
         )
+        # donate the cache: in-place dynamic-update-slice instead of a
+        # full slot-pool copy per decode step / admission (same trick as
+        # launch/dryrun.py's decode cells)
+        self._decode = jax.jit(
+            lambda p, tok, cache: D.decode_step(p, cfg, tok, cache),
+            donate_argnums=(2,),
+        )
+        # fresh lambda per engine so compile-cache accounting (_cache_size)
+        # is per-instance, not shared through the module-level function
+        self._insert = jax.jit(
+            lambda dst, src, row, slot, ln: D.cache_insert(
+                dst, src, row, slot, ln),
+            donate_argnums=(0,),
+        )
+
+    def _resolve_mode(self) -> str:
+        mode = self.ecfg.mode
+        if mode == "auto":
+            if (self.cfg.family in _CONTINUOUS_FAMILIES
+                    and "patch_embeds" not in self.extra
+                    and "enc_embeds" not in self.extra):
+                return "continuous"
+            return "static"
+        if mode == "continuous":
+            if self.cfg.family not in _CONTINUOUS_FAMILIES:
+                raise ValueError(
+                    f"continuous batching needs a KV-cache family "
+                    f"{_CONTINUOUS_FAMILIES}, got {self.cfg.family!r} "
+                    f"(recurrent prefill cannot skip pad tokens); "
+                    f"use mode='static'"
+                )
+            if self.extra:
+                raise ValueError(
+                    "continuous batching does not take per-request side "
+                    "inputs (enc_embeds/patch_embeds); use mode='static'"
+                )
+            return mode
+        if mode != "static":
+            raise ValueError(f"unknown engine mode {mode!r}")
+        return mode
 
     # -- API ---------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                eos_id: int = -1) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) + max_new_tokens > self.ecfg.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens}) "
+                f"exceeds max_len ({self.ecfg.max_len})"
+            )
         self._uid += 1
-        r = Request(self._uid, np.asarray(prompt, np.int32),
-                    max_new_tokens, eos_id, t_enqueue=time.time())
+        r = Request(self._uid, prompt, max_new_tokens, eos_id,
+                    t_enqueue=time.time())
         self.queue.append(r)
         return r.uid
 
     def run(self) -> List[Request]:
         """Drain the queue; returns finished requests with outputs."""
-        while self.queue:
-            batch = self.queue[: self.ecfg.max_batch]
-            self.queue = self.queue[self.ecfg.max_batch:]
-            self._run_batch(batch)
+        if self.mode == "continuous":
+            self._run_continuous()
+        else:
+            while self.queue:
+                batch = self.queue[: self.ecfg.max_batch]
+                self.queue = self.queue[self.ecfg.max_batch:]
+                self._run_batch(batch)
         return self.finished
 
-    # -- internals ----------------------------------------------------------
+    def reset_stats(self) -> None:
+        """Clear finished requests + scheduler telemetry (keeps compiled
+        functions warm) — so benchmarks can measure a post-warm-up run."""
+        self.finished = []
+        self.decode_steps = 0
+        self.prefill_calls = 0
+        self.step_occupancy = []
+        self.admissions = []
+
+    def stats(self) -> Dict[str, float]:
+        occ = float(np.mean(self.step_occupancy)) if self.step_occupancy else 0.0
+        return {
+            "mode": self.mode,
+            "decode_steps": self.decode_steps,
+            "prefill_calls": self.prefill_calls,
+            "mean_slot_occupancy": occ,
+            "admissions": len(self.admissions),
+        }
+
+    # -- shared -------------------------------------------------------------
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.ecfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(sub, logits / self.ecfg.temperature)
+
+    # -- continuous batching --------------------------------------------------
+    def _bucket(self, n: int) -> int:
+        return min(max(self.ecfg.min_bucket, _next_pow2(n)),
+                   self.ecfg.max_len)
+
+    def _retire(self, r: Request, now: float):
+        r.done, r.t_done = True, now
+        self.finished.append(r)
+
+    def _admit(self, cache, slots: List[Optional[Request]],
+               last_tok: np.ndarray, free: List[int]):
+        """Fill free slots from the queue with one bucketed prefill call.
+
+        Takes the queue head plus any later requests sharing its length
+        bucket (FIFO otherwise), right-pads to (pow2 batch, pow2 length)
+        so prefill shapes stay enumerable, samples each row's first token
+        from its TRUE last-prompt position, and scatters each row's
+        prefilled KV into its slot.
+        """
+        head = self.queue[0]
+        w = self._bucket(len(head.prompt))
+        limit = min(len(free), self.ecfg.prefill_batch)
+        take = [head]
+        for r in self.queue[1:]:
+            if len(take) >= limit:
+                break
+            if self._bucket(len(r.prompt)) == w:
+                take.append(r)
+        for r in take:
+            self.queue.remove(r)
+
+        m = len(take)
+        mp = min(_next_pow2(m), self.ecfg.prefill_batch)
+        toks = np.zeros((mp, w), np.int32)
+        for i, r in enumerate(take):
+            toks[i, : len(r.prompt)] = r.prompt      # RIGHT-padded: causal
+        logits, pcache = self._prefill_bucket(self.params, jnp.asarray(toks))
+        self.prefill_calls += 1
+        # each row's next token comes from its true last prompt position
+        idx = jnp.asarray([len(r.prompt) - 1 for r in take]
+                          + [0] * (mp - m))
+        first = np.asarray(self._sample(logits[jnp.arange(mp), idx]))
+        now = time.time()
+        for i, r in enumerate(take):
+            r.t_first_token = now
+            t = int(first[i])
+            r.output.append(t)
+            if t == r.eos_id or len(r.output) >= r.max_new_tokens:
+                self._retire(r, now)                 # never occupies a slot
+                continue
+            slot = free.pop(0)
+            cache = self._insert(cache, pcache, i, slot, len(r.prompt))
+            slots[slot] = r
+            r.slot = slot
+            last_tok[slot] = t
+            self.admissions.append(
+                {"step": self.decode_steps, "uid": r.uid, "slot": slot})
+        return cache
+
+    def _run_continuous(self):
+        n = self.ecfg.max_batch
+        cache = D.cache_init(self.params, self.cfg, n, self.ecfg.max_len,
+                             dtype=jnp.float32)
+        slots: List[Optional[Request]] = [None] * n
+        last_tok = np.zeros((n,), np.int32)
+        while self.queue or any(s is not None for s in slots):
+            # admission at the decode-step boundary
+            while self.queue and any(s is None for s in slots):
+                free = [i for i, s in enumerate(slots) if s is None]
+                cache = self._admit(cache, slots, last_tok, free)
+            if not any(s is not None for s in slots):
+                continue                             # all admits retired at t=1
+            self.step_occupancy.append(
+                sum(s is not None for s in slots) / n)
+            logits, cache = self._decode(
+                self.params, jnp.asarray(last_tok)[:, None], cache)
+            nxt = np.asarray(self._sample(logits[:, 0]))
+            self.decode_steps += 1
+            now = time.time()
+            for i, r in enumerate(slots):
+                if r is None:
+                    continue
+                t = int(nxt[i])
+                r.output.append(t)
+                last_tok[i] = t
+                if t == r.eos_id or len(r.output) >= r.max_new_tokens:
+                    self._retire(r, now)
+                    slots[i] = None                  # freed THIS step
+
+    # -- static batching ------------------------------------------------------
     def _pad_prompts(self, reqs: List[Request]) -> np.ndarray:
         # left-pad to the longest prompt so last position is the newest token
         s = max(len(r.prompt) for r in reqs)
@@ -95,12 +310,6 @@ class ServeEngine:
         for i, r in enumerate(reqs):
             out[i, s - len(r.prompt):] = r.prompt
         return out
-
-    def _sample(self, logits: jax.Array) -> jax.Array:
-        if self.ecfg.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1)
-        self._key, sub = jax.random.split(self._key)
-        return jax.random.categorical(sub, logits / self.ecfg.temperature)
 
     def _run_batch(self, reqs: List[Request]):
         tokens = self._pad_prompts(reqs)
@@ -115,17 +324,35 @@ class ServeEngine:
             )[: len(reqs)]
         if self.cfg.family == "vlm" and "patch_embeds" in self.extra:
             b["patch_embeds"] = jnp.asarray(self.extra["patch_embeds"])[: len(reqs)]
-        logits, cache = self._prefill(self.params, b)
+        logits, cache = self._prefill_full(self.params, b)
+        self.prefill_calls += 1
         nxt = self._sample(logits[:, -1])
         t_first = time.time()
         for r, t in zip(reqs, np.asarray(nxt)):
             r.output.append(int(t))
             r.t_first_token = t_first
+        # static batches left-pad to the LONGEST prompt (VLM: plus patch
+        # embeds), so a short prompt's decode budget can push KV writes
+        # past max_len even when every request individually fits
+        # (submit() checks per-request). Cap steps at remaining cache
+        # capacity: truncated output for the over-budget request, never a
+        # clamped write corrupting the cache. Pure-SSM state has no
+        # sequence axis to overflow.
         max_new = max(r.max_new_tokens for r in reqs)
+        if self.cfg.family != "ssm":
+            capacity = self.ecfg.max_len - int(np.asarray(cache["length"]))
+            max_new = min(max_new, capacity + 1)
         for _ in range(max_new - 1):
+            # occupancy relative to the slot pool a continuous scheduler
+            # would have: retired-but-held and unfilled slots count as idle
+            n_alive = sum(
+                not r.done and len(r.output) < r.max_new_tokens for r in reqs
+            )
+            self.step_occupancy.append(n_alive / self.ecfg.max_batch)
             logits, cache = self._decode(
                 self.params, jnp.asarray(nxt)[:, None], cache
             )
+            self.decode_steps += 1
             nxt = self._sample(logits[:, 0])
             now = time.time()
             alive = False
@@ -148,15 +375,25 @@ class ServeEngine:
 
 
 def throughput_stats(reqs: List[Request]) -> Dict[str, float]:
+    """Aggregate request metrics; robust to empty/never-started requests.
+
+    Requests that never produced a token contribute to ``requests`` but
+    not to TTFT (no first token to time); a request list with no finish
+    timestamps falls back to enqueue time so ``tokens_per_s`` is 0 rather
+    than garbage.
+    """
     if not reqs:
         return {}
     total_tokens = sum(len(r.output) for r in reqs)
     t0 = min(r.t_enqueue for r in reqs)
-    t1 = max(r.t_done for r in reqs)
-    ttft = [r.t_first_token - r.t_enqueue for r in reqs]
+    finished = [r.t_done for r in reqs if r.t_done]
+    elapsed = (max(finished) - t0) if finished else 0.0
+    started = [r for r in reqs if r.t_first_token > 0.0]
+    ttft = [r.t_first_token - r.t_enqueue for r in started]
     return {
         "requests": len(reqs),
+        "started": len(started),
         "total_tokens": total_tokens,
-        "tokens_per_s": total_tokens / max(t1 - t0, 1e-9),
-        "mean_ttft_s": float(np.mean(ttft)),
+        "tokens_per_s": total_tokens / elapsed if elapsed > 0 else 0.0,
+        "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
     }

@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""Markdown link check (offline): every relative link target must exist.
+
+Scans the given markdown files/directories for inline links and images
+``[text](target)`` and verifies that relative targets resolve to a real
+file or directory (anchors are stripped; ``http(s)``/``mailto`` targets
+are skipped — CI has no network). Exits non-zero listing every broken
+link, so docs can't silently rot as files move.
+
+    python tools/check_links.py README.md docs ROADMAP.md
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import Iterable, List, Tuple
+
+# inline [text](target) / ![alt](target); target up to the first
+# unescaped ')' — good enough for the plain links this repo uses
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def iter_md_files(args: Iterable[str]) -> List[Path]:
+    files: List[Path] = []
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.suffix == ".md":
+            files.append(p)
+        else:
+            raise SystemExit(f"not a markdown file or directory: {a}")
+    return files
+
+
+def check_file(md: Path) -> Tuple[List[Tuple[int, str]], int]:
+    """Returns (broken links, number of relative links checked)."""
+    broken: List[Tuple[int, str]] = []
+    checked = 0
+    in_code = False
+    for lineno, line in enumerate(md.read_text().splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            checked += 1
+            if not (md.parent / path).exists():
+                broken.append((lineno, target))
+    return broken, checked
+
+
+def main(argv: List[str]) -> int:
+    files = iter_md_files(argv or ["README.md", "docs"])
+    n_links = 0
+    failures = 0
+    for md in files:
+        broken, checked = check_file(md)
+        n_links += checked
+        for lineno, target in broken:
+            print(f"BROKEN {md}:{lineno}: {target}")
+            failures += 1
+    print(f"[check_links] {len(files)} files, {n_links} relative links "
+          f"checked, {failures} broken")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
