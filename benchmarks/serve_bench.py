@@ -11,8 +11,18 @@ Reports tokens/s, mean TTFT and mean slot occupancy per mode plus the
 continuous/static speedup, and writes the result as JSON
 (``BENCH_serve.json``) so CI can archive the perf trajectory.
 
+``--devices N`` additionally sweeps tensor-parallel mesh sizes: N CPU
+virtual devices are forged (``--xla_force_host_platform_device_count``,
+so the flag must come before any other JAX use in the process) and the
+psq-packed continuous engine runs once per ``model``-axis size in
+{1, 2, ..., N} (powers of two), recording a per-mesh-size tokens/s
+entry under ``"sharded"``. On CPU this measures dispatch overhead, not
+speedup — the point is that CI exercises the 1/2/4-way sharded
+datapath end to end (docs/parallelism.md).
+
     PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] \
-        [--requests 32] [--slots 8] [--psq-packed] [--out BENCH_serve.json]
+        [--requests 32] [--slots 8] [--psq-packed] [--devices 4] \
+        [--out BENCH_serve.json]
 """
 from __future__ import annotations
 
@@ -27,6 +37,7 @@ import jax
 
 from repro.configs import get_config
 from repro.core.config import PSQ_TERNARY
+from repro.kernels import registry
 from repro.models import init_model
 from repro.serve import (
     EngineConfig, PackedModelCache, ServeEngine, pack_tree_psq,
@@ -47,10 +58,11 @@ def make_trace(n: int, prompt_rng: Tuple[int, int], new_rng: Tuple[int, int],
 
 
 def bench_mode(mode: str, params, cfg, trace, slots: int,
-               max_len: int) -> Dict[str, float]:
+               max_len: int, mesh=None) -> Dict[str, float]:
     eng = ServeEngine(params, cfg,
                       EngineConfig(max_batch=slots, max_len=max_len,
-                                   mode=mode))
+                                   mode=mode),
+                      mesh=mesh)
     # warm-up pass: compile every (bucket, batch) shape the trace needs
     for prompt, mnew in trace:
         eng.submit(prompt, max_new_tokens=mnew)
@@ -107,6 +119,7 @@ def run(args) -> Dict:
         "slots": slots,
         "max_len": max_len,
         "platform": jax.default_backend(),
+        "devices": len(jax.devices()),
     }
     for mode in ("static", "continuous"):
         result[mode] = bench_mode(mode, params, cfg, trace, slots, max_len)
@@ -121,7 +134,57 @@ def run(args) -> Dict:
     )
     print(f"[serve_bench] continuous/static speedup: "
           f"{result['speedup_tokens_per_s']:.2f}x")
+    if args.devices > 1:
+        result["sharded"] = run_sharded_sweep(args)
     return result
+
+
+def run_sharded_sweep(args) -> List[Dict]:
+    """Per-mesh-size tokens/s for the tensor-parallel PSQ datapath.
+
+    The same mixed-length trace drives the psq-packed continuous engine
+    under a ``(1, m)`` ("data", "model") mesh for every power-of-two
+    ``m`` up to ``--devices``. ``m=1`` is the single-device baseline
+    the sharded entries compare against.
+    """
+    n_dev = len(jax.devices())
+    if n_dev < args.devices:
+        raise SystemExit(
+            f"--devices {args.devices} but only {n_dev} JAX devices exist "
+            f"— the flag must be the first JAX use in the process"
+        )
+    cfg = get_config(args.arch).reduced()
+    qcfg = dataclasses.replace(PSQ_TERNARY, kernel_backend="reference",
+                               xbar_rows=64)
+    cfg = cfg.with_quant(qcfg)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    cache = PackedModelCache()
+
+    if args.smoke:
+        n_req, prompt_rng, new_rng, slots, max_len = 4, (4, 12), (2, 4), 2, 32
+    else:
+        n_req, prompt_rng, new_rng = args.requests, (8, 64), (4, 32)
+        slots, max_len = args.slots, 128
+    trace = make_trace(n_req, prompt_rng, new_rng, cfg.vocab_size)
+
+    sizes = []
+    m = 1
+    while m <= args.devices:
+        sizes.append(m)
+        m *= 2
+    entries: List[Dict] = []
+    for m in sizes:
+        mesh = jax.make_mesh((1, m), ("data", "model"))
+        packed = pack_tree_psq(params, qcfg, cache, mesh=mesh)
+        r = bench_mode("continuous", packed, cfg, trace, slots, max_len,
+                       mesh=mesh)
+        entry = {"devices": m, "mesh": f"data=1,model={m}",
+                 "pack_stats": cache.stats(), **r}
+        entries.append(entry)
+        print(f"[serve_bench] sharded model={m}: "
+              f"{r['tokens_per_s']:8.1f} tok/s  "
+              f"occupancy {r['mean_slot_occupancy']:.2f}")
+    return entries
 
 
 def main() -> None:
@@ -133,10 +196,20 @@ def main() -> None:
                     help="serve from the weight-stationary PackedLayer cache")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace + model (CI mode)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="CPU virtual devices for the tensor-parallel mesh "
+                         "sweep (must be the first JAX use in the process)")
     ap.add_argument("--out", default="BENCH_serve.json",
                     help="JSON output path")
     args = ap.parse_args()
+    if args.devices:
+        # safe despite the module-level jax import: the flag is read at
+        # backend INIT, and nothing above touches devices before run()
+        from repro.launch.mesh import force_host_device_count
+
+        force_host_device_count(args.devices)
     result = run(args)
+    result["kernel_backends"] = registry.describe()
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(f"[serve_bench] wrote {args.out}")

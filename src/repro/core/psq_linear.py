@@ -3,6 +3,17 @@
 Every projection in the model zoo routes through this module so the HCiM
 technique (mode="psq"), the ADC baselines (mode="adc") and the fp path
 (mode="none") are selectable per experiment from the config system.
+
+Serving additionally routes through the tensor-parallel path when the
+active sharding rules ask for it (``parallel.sharding.tp_axes``): a
+packed layer's columns are split over the ``model`` mesh axis, each
+device runs the full PSQ pipeline on its column slice via the registered
+kernel backend (per-shard dispatch — the kernel sees local shapes), and
+one ``psum`` performs the cross-device shift-add that recombines the
+column blocks. Column splitting is bit-exact: every step of the HCiM
+pipeline downstream of the weight codes (bit-plane partial sums,
+comparator, DCiM scale-factor accumulate, digital offset correction) is
+independent per output column.
 """
 from __future__ import annotations
 
@@ -11,9 +22,13 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
 
 from repro.core import psq
 from repro.core.config import QuantConfig
+from repro.kernels import registry
+from repro.parallel import sharding as shd
 
 Params = Dict[str, jax.Array]
 
@@ -86,6 +101,46 @@ def pack_tree_for_serving(node):
     return node
 
 
+def serve_linear_tp(
+    layer, x: jax.Array, mesh: Mesh, axis: str
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Tensor-parallel packed-layer forward: columns over ``axis``.
+
+    ``shard_map`` hands each device its column slice of the packed state
+    (specs from :func:`repro.parallel.sharding.packed_layer_pspecs`);
+    the kernel backend is dispatched per shard on the local ``(B, K) x
+    (K, O/n)`` problem; each shard scatters its block into a zero
+    ``(B, O)`` buffer and a single ``psum`` over ``axis`` recombines —
+    the cross-device digital shift-add. Adding disjoint blocks of exact
+    values keeps the result bit-identical to the single-device forward.
+
+    Falls back to the unsharded forward when the column count does not
+    divide the axis (the divisibility story of the rules table).
+    """
+    n = mesh.shape[axis]
+    o = layer.w_codes.shape[-1]
+    if o % n != 0:
+        return layer.apply_serving(x)
+    # fail fast on an unavailable backend before entering the mapped
+    # trace, where the registry error would lose the sharding context
+    registry.resolve_backend(layer.cfg)
+    specs = shd.packed_layer_pspecs(layer, mesh=mesh)
+    xspec = shd.data_pspec(x.ndim, x.shape, exclude=(axis,))
+
+    def local_fn(lyr, xl):
+        y, _ = lyr.apply_serving(xl)
+        idx = jax.lax.axis_index(axis)
+        full = jnp.zeros(y.shape[:-1] + (o,), y.dtype)
+        full = jax.lax.dynamic_update_slice_in_dim(
+            full, y, idx * (o // n), axis=y.ndim - 1
+        )
+        return jax.lax.psum(full, axis)
+
+    fn = shard_map(local_fn, mesh=mesh, in_specs=(specs, xspec),
+                   out_specs=xspec, check_rep=False)
+    return fn(layer, x), {}
+
+
 def apply_linear(
     params: Params,
     x: jax.Array,
@@ -95,6 +150,9 @@ def apply_linear(
     if hasattr(params, "apply_serving"):
         # PackedLayer (repro.serve.cache): weight-stationary packed state,
         # quantized/packed once at model load — bias folded in there.
+        tp = shd.tp_axes()
+        if tp is not None:
+            return serve_linear_tp(params, x, *tp)
         return params.apply_serving(x)
     if "w_packed" in params:  # int4 weight-stationary serving path
         y = _unpack_int4_matmul(x, params["w_packed"], params["w_scale"])

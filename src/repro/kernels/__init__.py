@@ -10,6 +10,7 @@ from repro.kernels.registry import (  # noqa: F401
     KernelBackend,
     available_backends,
     default_backend,
+    describe,
     get_backend,
     register_backend,
     registered_backends,

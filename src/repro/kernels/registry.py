@@ -37,6 +37,19 @@ Example — look up the conformance oracle and check what's registered:
     >>> all(b in registry.registered_backends()
     ...     for b in ("reference", "pallas-interpret", "pallas"))
     True
+
+Per-shard dispatch under tensor parallelism
+-------------------------------------------
+The serving TP path (``core.psq_linear.serve_linear_tp``) calls the
+backend *inside* a ``shard_map`` body, so ``psq_matmul`` sees the LOCAL
+problem — ``(B, K) x (K, O/n)`` for an ``n``-way column split — and a
+Pallas backend lowers one kernel per device over its own column block
+(GSPMD cannot partition a ``pallas_call``; manual sharding is how the
+kernels scale out). Resolution is shape-independent, so the same
+selection order applies per shard; callers resolve once *before*
+entering the mapped trace to fail fast on unavailable backends (see
+:func:`resolve_backend`). :func:`describe` gives launchers a one-line
+availability table for logs and bench metadata.
 """
 from __future__ import annotations
 
@@ -50,6 +63,7 @@ __all__ = [
     "KernelBackend",
     "available_backends",
     "default_backend",
+    "describe",
     "get_backend",
     "register_backend",
     "registered_backends",
@@ -110,6 +124,27 @@ def registered_backends() -> List[str]:
     True
     """
     return sorted(_REGISTRY)
+
+
+def describe() -> List[Dict[str, object]]:
+    """Availability table: one row per registered backend.
+
+    Stable name order; ``available`` is evaluated lazily against the
+    current JAX platform. Launchers and benches embed this in their
+    logs/JSON so a recorded run states which implementations it could
+    have dispatched to.
+
+    >>> rows = describe()
+    >>> [r["name"] for r in rows] == registered_backends()
+    True
+    >>> all(set(r) == {"name", "description", "available"} for r in rows)
+    True
+    """
+    return [
+        {"name": n, "description": _REGISTRY[n].description,
+         "available": _REGISTRY[n].is_available()}
+        for n in sorted(_REGISTRY)
+    ]
 
 
 def available_backends() -> List[str]:

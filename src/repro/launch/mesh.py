@@ -27,3 +27,20 @@ def make_host_mesh(model_parallel: int = 1):
 
     data, model = remesh_plan(n, model_parallel)
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def force_host_device_count(n: int) -> None:
+    """Forge ``n`` virtual CPU devices via ``XLA_FLAGS``.
+
+    Must run before the XLA backend initializes — importing jax is fine,
+    touching devices/arrays is not (the flag is read once at backend
+    init). A count already present in ``XLA_FLAGS`` wins, so an explicit
+    environment (CI jobs, tests/conftest.py) is never overridden.
+    """
+    import os
+
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}"
+        )

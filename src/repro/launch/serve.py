@@ -2,34 +2,31 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --requests 8 [--int4 | --psq-packed] [--backend reference] \
-        [--slots 4] [--mode auto|continuous|static]
+        [--slots 4] [--mode auto|continuous|static] \
+        [--mesh DATA,MODEL] [--devices N]
 
 KV-cache families serve through the continuous-batching slot pool
 (per-step retirement + mid-flight admission, see docs/serving.md);
 recurrent/side-input families fall back to static batching.
+
+Multi-device: ``--mesh 1,4`` runs the PSQ datapath tensor-parallel over
+a 4-way ``model`` axis (packed layers column-sharded, one psum per
+matmul) and ``--mesh 4,1`` shards the decode slot pool over ``data``.
+On CPU, ``--devices N`` forges N virtual devices (sets
+``--xla_force_host_platform_device_count`` — must run before any other
+JAX use in the process). See docs/parallelism.md.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 
-import jax
-import numpy as np
 
-from repro.configs import get_config, list_archs
-from repro.core.config import PSQ_TERNARY
-from repro.core.psq_linear import pack_tree_for_serving
-from repro.kernels import registry
-from repro.launch.mesh import make_host_mesh
-from repro.models import init_model
-from repro.parallel.sharding import RULES_2D, axis_rules
-from repro.serve import (
-    EngineConfig, PackedModelCache, ServeEngine, pack_tree_psq,
-    throughput_stats,
-)
+def _parse_args():
+    # configs/argparse only — jax is imported after --devices is applied
+    from repro.configs import list_archs
+    from repro.kernels import registry
 
-
-def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b", choices=list_archs())
     ap.add_argument("--requests", type=int, default=8)
@@ -51,7 +48,50 @@ def main():
                     choices=["auto", "continuous", "static"],
                     help="scheduler: continuous batching (KV families) "
                          "or the static drain-the-queue loop")
-    args = ap.parse_args()
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="mesh axis sizes, e.g. 1,4 (model-parallel PSQ "
+                         "columns) or 2,2; needs DATA*MODEL devices "
+                         "(default: all devices data-parallel)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="CPU only: forge N virtual devices via XLA_FLAGS "
+                         "(must be the first JAX use in the process)")
+    return ap.parse_args()
+
+
+def main():
+    args = _parse_args()
+    if args.devices:
+        from repro.launch.mesh import force_host_device_count
+
+        force_host_device_count(args.devices)
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.config import PSQ_TERNARY
+    from repro.core.psq_linear import pack_tree_for_serving
+    from repro.kernels import registry
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import init_model
+    from repro.serve import (
+        EngineConfig, PackedModelCache, ServeEngine, pack_tree_psq,
+        throughput_stats,
+    )
+
+    if args.mesh:
+        d, m = (int(v) for v in args.mesh.split(","))
+        if d * m > len(jax.devices()):
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {d * m} devices, have "
+                f"{len(jax.devices())} (on CPU add --devices {d * m})"
+            )
+        mesh = jax.make_mesh((d, m), ("data", "model"))
+    else:
+        mesh = make_host_mesh()
+    print(f"[serve] mesh: "
+          f"{'x'.join(f'{k}={v}' for k, v in mesh.shape.items())}  "
+          f"backends: {registry.describe()}")
 
     cfg = get_config(args.arch).reduced()
     if args.psq_packed:
@@ -62,32 +102,31 @@ def main():
         cfg = cfg.with_quant(qcfg)
         params = init_model(jax.random.PRNGKey(0), cfg)
         cache = PackedModelCache()
-        params = pack_tree_psq(params, qcfg, cache)
+        params = pack_tree_psq(params, qcfg, cache, mesh=mesh)
         print(f"[serve] packed {cache.stats()['layers']} layers once "
-              f"(backend={backend})")
+              f"(backend={backend}, column-sharded over the model axis)")
     else:
         params = init_model(jax.random.PRNGKey(0), cfg)
     if args.int4:
         params = pack_tree_for_serving(params)
 
-    mesh = make_host_mesh()
     extra = {}
     rng = np.random.RandomState(0)
     if cfg.family == "encdec":
         extra["enc_embeds"] = rng.randn(
             args.requests, args.max_len, cfg.d_model
         ).astype(np.float32) * 0.1
-    with mesh, axis_rules(RULES_2D, mesh):
-        eng = ServeEngine(
-            params, cfg,
-            EngineConfig(max_batch=args.slots, max_len=args.max_len,
-                         temperature=args.temperature, mode=args.mode),
-            extra_inputs=extra,
-        )
-        for _ in range(args.requests):
-            eng.submit(rng.randint(0, cfg.vocab_size, size=rng.randint(4, 16)),
-                       max_new_tokens=args.max_new_tokens)
-        done = eng.run()
+    eng = ServeEngine(
+        params, cfg,
+        EngineConfig(max_batch=args.slots, max_len=args.max_len,
+                     temperature=args.temperature, mode=args.mode),
+        extra_inputs=extra,
+        mesh=mesh,
+    )
+    for _ in range(args.requests):
+        eng.submit(rng.randint(0, cfg.vocab_size, size=rng.randint(4, 16)),
+                   max_new_tokens=args.max_new_tokens)
+    done = eng.run()
     stats = throughput_stats(done)
     fmt = "psq-packed" if args.psq_packed else ("int4" if args.int4 else "fp")
     print(f"[serve] {args.arch} weights={fmt} scheduler={eng.stats()}")

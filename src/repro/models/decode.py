@@ -118,10 +118,11 @@ def cache_init(
     ``cache["length"]`` is an ``(n_slots,)`` int32 vector, so each slot
     advances independently — :func:`decode_step` masks, positions and
     writes per slot. Fresh slots start at length 0; admit a request with
-    :func:`cache_insert`.
+    :func:`cache_insert`. Under active sharding rules the length vector
+    follows the slot ("batch") axis, like every other per-slot leaf.
     """
     cache = init_cache(params, cfg, n_slots, max_len, dtype=dtype)
-    cache["length"] = jnp.zeros((n_slots,), jnp.int32)
+    cache["length"] = constrain(jnp.zeros((n_slots,), jnp.int32), "batch")
     return cache
 
 

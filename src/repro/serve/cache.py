@@ -224,17 +224,30 @@ class PackedModelCache:
         self.hits = 0
 
     def get_or_pack(
-        self, key: str, params: Dict[str, jax.Array], cfg: QuantConfig
+        self, key: str, params: Dict[str, jax.Array], cfg: QuantConfig,
+        placer=None,
     ) -> PackedLayer:
+        """Cached pack; ``placer`` (layer -> layer) applies device placement.
+
+        Placement is fingerprint-stable and never enters the store: the
+        fingerprint is computed from the source params only, the cache
+        always holds the unplaced packed state, and ``placer`` is applied
+        to the returned value per call. Packing the same weights for a
+        different mesh — or with no mesh after a meshed pack — is thus a
+        cache **hit** that yields exactly the placement asked for (a
+        cheap ``device_put``; a no-op when the sharding already matches),
+        never re-derived and never somebody else's sharding.
+        """
         fp = _weight_fingerprint(params, cfg)
         entry = self._store.get(key)
         if entry is not None and entry[0] == fp:
             self.hits += 1
-            return entry[1]
-        self.packs += 1
-        layer = _pack_node(params, cfg)
-        self._store[key] = (fp, layer)
-        return layer
+            layer = entry[1]
+        else:
+            self.packs += 1
+            layer = _pack_node(params, cfg)
+            self._store[key] = (fp, layer)
+        return placer(layer) if placer is not None else layer
 
     def __len__(self) -> int:
         return len(self._store)
@@ -249,12 +262,22 @@ def pack_tree_psq(
     cfg: QuantConfig,
     cache: Optional[PackedModelCache] = None,
     _path: str = "",
+    *,
+    mesh=None,
+    rules=None,
 ):
     """Replace every quantized linear's params with a :class:`PackedLayer`.
 
     Embeddings, norms and non-linear leaves pass through untouched. Pass
     the same ``cache`` on subsequent loads (weight reload, engine restart
     on identical params) to reuse packed state instead of re-deriving it.
+
+    ``mesh`` places every packed layer column-sharded over the mesh's
+    ``model`` axis as it is packed (tensor-parallel serving; see
+    ``docs/parallelism.md``) — the analogue of programming each device's
+    crossbar columns once at load. Placement does not enter the cache
+    fingerprint: re-packing identical weights for a different mesh is
+    all hits, zero packs, and the cached state is merely re-placed.
 
     Requires a quantized config — packing an fp tree is a bug, not a
     no-op:
@@ -270,16 +293,23 @@ def pack_tree_psq(
                          f"(mode={cfg.mode!r})")
     if cache is None:
         cache = PackedModelCache()
+    placer = None
+    if mesh is not None:
+        from repro.parallel.sharding import shard_packed_layer
+
+        placer = lambda layer: shard_packed_layer(layer, mesh, rules)
     if _is_quantized_linear(node):
-        return cache.get_or_pack(_path, node, cfg)
+        return cache.get_or_pack(_path, node, cfg, placer=placer)
     if isinstance(node, dict):
         return {
-            k: pack_tree_psq(v, cfg, cache, f"{_path}/{k}")
+            k: pack_tree_psq(v, cfg, cache, f"{_path}/{k}",
+                             mesh=mesh, rules=rules)
             for k, v in node.items()
         }
     if isinstance(node, (list, tuple)):
         return type(node)(
-            pack_tree_psq(v, cfg, cache, f"{_path}[{i}]")
+            pack_tree_psq(v, cfg, cache, f"{_path}[{i}]",
+                          mesh=mesh, rules=rules)
             for i, v in enumerate(node)
         )
     return node

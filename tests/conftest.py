@@ -1,0 +1,18 @@
+"""Tier-1 suite environment: 4 virtual CPU devices.
+
+The sharded-serving tests (tests/test_sharding.py,
+tests/test_serve_engine.py) need a multi-device mesh. On CPU, JAX forges
+virtual devices via ``--xla_force_host_platform_device_count``, which is
+only honored if set before the XLA backend initializes — hence this
+conftest, which pytest imports before any test module. An explicit
+``XLA_FLAGS`` in the environment (e.g. the CI ``mesh4`` job, or a
+deliberate single-device run) wins; the multi-device tests skip
+themselves when fewer devices exist than they need.
+"""
+import os
+
+_FLAG = "--xla_force_host_platform_device_count"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + f" {_FLAG}=4"
+    )
