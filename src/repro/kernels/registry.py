@@ -18,16 +18,23 @@ Built-in backends:
   pallas           compiled Pallas kernels — TPU/GPU only; the serving
                    fast path.
 
-Backends expose two entry points with fixed signatures:
+Backends expose three entry points with fixed signatures:
 
   psq_matmul(x_int, w_int, sf_q, alpha, *, n_a, n_w, levels, adc_bits,
              xbar_rows, fuse_planes=False) -> y_int        (B, O)
   int4_matmul(x, w_packed, scale) -> y                     (B, O)
+  paged_attention(q, k_pool, v_pool, block_tables, lengths,
+                  k_new, v_new) -> ctx                     (B, H, D)
 
 ``x_int``/``w_int`` are integer-valued f32 codes, ``sf_q`` the
 dequantized fixed-point scale factors broadcastable to
 ``(T, n_a, n_w, O)`` — exactly the contract of
-:func:`repro.kernels.ref.psq_matmul_ref`.
+:func:`repro.kernels.ref.psq_matmul_ref`. ``paged_attention`` is the
+single-token decode attention over the paged KV pool (block-table
+indirection; contract in :mod:`repro.kernels.paged_attention`) — it is
+optional for third-party backends (``None`` means not implemented, and
+``models.decode.decode_step_paged`` falls back to its inline gather
+path when no backend is requested).
 
 Example — look up the conformance oracle and check what's registered:
 
@@ -84,6 +91,8 @@ class KernelBackend:
     int4_matmul: Callable[..., jax.Array]
     # availability is queried lazily: it can depend on jax.default_backend()
     is_available: Callable[[], bool] = lambda: True
+    # optional paged-decode attention (kernels/paged_attention.py contract)
+    paged_attention: Optional[Callable[..., jax.Array]] = None
 
     def require_available(self) -> "KernelBackend":
         if not self.is_available():
@@ -290,6 +299,24 @@ def _pallas_int4(interpret: bool):
     return call
 
 
+def _reference_paged(q, k_pool, v_pool, block_tables, lengths, k_new, v_new):
+    from repro.kernels.paged_attention import paged_attention_ref
+
+    return paged_attention_ref(q, k_pool, v_pool, block_tables, lengths,
+                               k_new, v_new)
+
+
+def _pallas_paged(interpret: bool):
+    def call(q, k_pool, v_pool, block_tables, lengths, k_new, v_new):
+        from repro.kernels.paged_attention import paged_attention_kernel
+
+        return paged_attention_kernel(q, k_pool, v_pool, block_tables,
+                                      lengths, k_new, v_new,
+                                      interpret=interpret)
+
+    return call
+
+
 def _compiled_pallas_available() -> bool:
     # pallas_call only lowers through Mosaic/Triton on accelerators;
     # CPU supports interpret mode exclusively.
@@ -301,6 +328,7 @@ register_backend(KernelBackend(
     description="pure-jnp bit-exact oracle (conformance baseline)",
     psq_matmul=_reference_psq,
     int4_matmul=_reference_int4,
+    paged_attention=_reference_paged,
 ))
 
 register_backend(KernelBackend(
@@ -308,6 +336,7 @@ register_backend(KernelBackend(
     description="Pallas kernels, interpreter (portable, correctness path)",
     psq_matmul=_pallas_psq(interpret=True),
     int4_matmul=_pallas_int4(interpret=True),
+    paged_attention=_pallas_paged(interpret=True),
 ))
 
 register_backend(KernelBackend(
@@ -316,4 +345,5 @@ register_backend(KernelBackend(
     psq_matmul=_pallas_psq(interpret=False),
     int4_matmul=_pallas_int4(interpret=False),
     is_available=_compiled_pallas_available,
+    paged_attention=_pallas_paged(interpret=False),
 ))

@@ -7,7 +7,9 @@
 
 KV-cache families serve through the continuous-batching slot pool
 (per-step retirement + mid-flight admission, see docs/serving.md);
-recurrent/side-input families fall back to static batching.
+recurrent/side-input families fall back to static batching. ``--paged``
+switches the slot pool to the paged KV cache — fixed-size pages, block
+tables and shared-prefix radix reuse (docs/memory.md).
 
 Multi-device: ``--mesh 1,4`` runs the PSQ datapath tensor-parallel over
 a 4-way ``model`` axis (packed layers column-sharded, one psum per
@@ -48,6 +50,16 @@ def _parse_args():
                     choices=["auto", "continuous", "static"],
                     help="scheduler: continuous batching (KV families) "
                          "or the static drain-the-queue loop")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: page pool + block tables + "
+                         "shared-prefix radix reuse (continuous only; "
+                         "see docs/memory.md)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV page for --paged "
+                         "(must divide --max-len)")
+    ap.add_argument("--no-prefix-reuse", action="store_true",
+                    help="keep the paged layout but disable the "
+                         "shared-prefix radix index")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
                     help="mesh axis sizes, e.g. 1,4 (model-parallel PSQ "
                          "columns) or 2,2; needs DATA*MODEL devices "
@@ -119,7 +131,9 @@ def main():
     eng = ServeEngine(
         params, cfg,
         EngineConfig(max_batch=args.slots, max_len=args.max_len,
-                     temperature=args.temperature, mode=args.mode),
+                     temperature=args.temperature, mode=args.mode,
+                     paged=args.paged, block_size=args.block_size,
+                     prefix_reuse=not args.no_prefix_reuse),
         extra_inputs=extra,
         mesh=mesh,
     )

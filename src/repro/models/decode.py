@@ -2,19 +2,33 @@
 
 Caches are *stacked* pytrees (leading dim = #layers in the stack), so
 ``decode_step`` is a single ``lax.scan`` over (layer params, layer cache)
-— one compiled block regardless of depth, with the KV cache sequence dim
-sharded per the active rules (``kv_seq``->model for 32k decode,
-``long_kv_seq``->data x model for the 500k cells).
+— one compiled block regardless of depth. Under the active rules table
+(``parallel/sharding.py``) per-slot cache leaves follow the ``batch``
+axis onto the ``data`` mesh axis; the KV sequence dim stays local except
+for the 500k-context cells (``long_kv_seq`` -> ``data``).
 
 ``decode_step`` is exactly what launch/dryrun.py lowers for the
 ``decode_*`` / ``long_500k`` shape cells; ``prefill`` is the parallel
 prompt pass that fills the same cache structure (no token-by-token scan:
 attention K/V come from the parallel forward, SSM/xLSTM final states
 from their chunked forms).
+
+Two KV layouts share the same decode math:
+
+* **contiguous** — one ``(B, max_len, H_kv, D)`` stripe per slot
+  (``init_cache``/``cache_init``), the static path and the default
+  continuous path, and the only layout the recurrent/side-input
+  families support;
+* **paged** — one ``(num_blocks, block_size, H_kv, D)`` page pool per
+  layer plus per-slot block tables (``paged_cache_init`` /
+  ``decode_step_paged`` / ``prefill_paged_suffix``), the
+  continuous-engine layout that enables shared-prefix reuse
+  (``serve/paged_kv.py``, docs/memory.md).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -158,6 +172,304 @@ def cache_insert(dst: Dict, src: Dict, row, slot, length) -> Dict:
 
 
 # ---------------------------------------------------------------------------
+# paged cache (fixed page pool + per-slot block tables)
+# ---------------------------------------------------------------------------
+
+# families whose decode state is a pure KV cache — the only ones the
+# paged layout supports (recurrent state has no sequence axis to page;
+# encdec/VLM side inputs already force the static scheduler)
+_PAGED_FAMILIES = ("dense", "moe", "vlm")
+
+
+def _check_paged_family(cfg: ArchConfig) -> None:
+    if cfg.family not in _PAGED_FAMILIES:
+        raise ValueError(
+            f"paged KV cache supports the pure KV-cache families "
+            f"{_PAGED_FAMILIES}, got {cfg.family!r}"
+        )
+
+
+def paged_cache_init(
+    params: Params, cfg: ArchConfig, n_slots: int, max_len: int,
+    block_size: int, num_blocks: int, dtype=jnp.bfloat16,
+) -> Dict:
+    """A paged decode pool: page-granular KV storage + per-slot lengths.
+
+    Instead of one contiguous ``(n_slots, max_len, ...)`` stripe per
+    leaf (:func:`cache_init`), KV lives in ONE pool of ``num_blocks``
+    pages of ``block_size`` tokens per layer stack —
+    ``(n_layers, num_blocks, block_size, H_kv, D)`` — and a slot reaches
+    its sequence through a block table (``serve/paged_kv.py``) passed to
+    :func:`decode_step_paged` each step. Page 0 is the trash page free
+    slots write into. Under active sharding rules the page axis follows
+    the ``kv_blocks`` rule (``data`` mesh axis) and lengths follow
+    ``batch``.
+    """
+    del params
+    _check_paged_family(cfg)
+    if max_len % block_size:
+        raise ValueError(
+            f"max_len ({max_len}) must be a multiple of "
+            f"block_size ({block_size})"
+        )
+    shape = (cfg.n_layers, num_blocks, block_size,
+             cfg.n_kv_heads, cfg.resolved_head_dim)
+
+    def z():
+        # distinct k/v buffers: donation-safe, like _kv_zeros
+        return constrain(jnp.zeros(shape, dtype),
+                         None, "kv_blocks", None, "kv_heads", "head_dim")
+
+    return {
+        "kv": {"k": z(), "v": z()},
+        "length": constrain(jnp.zeros((n_slots,), jnp.int32), "batch"),
+    }
+
+
+def paged_cache_insert(dst: Dict, src_kv: Dict, row, slot, block_row,
+                       start, total_len) -> Dict:
+    """Scatter prefilled K/V rows into a slot's pages.
+
+    ``src_kv`` is a ``{"k", "v"}`` pair of stacked ``(L, B, W, H_kv, D)``
+    leaves (a :func:`prefill` cache's ``kv`` for cold admission, or
+    :func:`prefill_paged_suffix` output for a prefix hit); token ``t`` of
+    row ``row`` lands at sequence position ``start + t`` — page
+    ``block_row[(start + t) // bs]``, offset ``(start + t) % bs``.
+    Right-pad positions (``start + t >= total_len``) are routed to the
+    trash page. ``row``/``slot``/``start``/``total_len`` may be traced:
+    one compile per source width ``W``.
+    """
+    bs = dst["kv"]["k"].shape[2]
+    mb = block_row.shape[-1]
+    w = src_kv["k"].shape[2]
+    t = jnp.arange(w)
+    pos = start + t
+    bi = jnp.minimum(pos // bs, mb - 1)
+    blk = jnp.where(pos < total_len, block_row[bi], 0)
+    off = pos % bs
+
+    def ins(pool, s_leaf):
+        chunk = jnp.take(s_leaf, row, axis=1).astype(pool.dtype)
+        return pool.at[:, blk, off].set(chunk)
+
+    return {
+        "kv": {
+            "k": ins(dst["kv"]["k"], src_kv["k"]),
+            "v": ins(dst["kv"]["v"], src_kv["v"]),
+        },
+        "length": dst["length"].at[slot].set(
+            jnp.asarray(total_len, dst["length"].dtype)),
+    }
+
+
+def _gather_pages(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """(NB, bs, H_kv, D) pool + (B, MB) tables -> (B, MB*bs, H_kv, D).
+
+    Page order in the table is sequence order, so the gathered view is
+    value-identical to the contiguous per-slot stripe — which is what
+    makes paged decode bit-exact with the contiguous path.
+    """
+    b, mb = block_tables.shape
+    g = pool[block_tables]                 # (B, MB, bs, Hkv, D)
+    return g.reshape(b, mb * pool.shape[1], *pool.shape[2:])
+
+
+def _commit_kv_paged(kv: Dict, upd: Dict, length: jax.Array,
+                     block_tables: jax.Array) -> Dict:
+    """Write all layers' new-token K/V into each slot's current page.
+
+    The paged analogue of :func:`_commit_kv`: position ``length[b]``
+    maps through the block table; retired slots' tables point at the
+    trash page (and their clamped page index lands there too), so the
+    fixed-shape scatter never corrupts live pages.
+    """
+    bs = kv["k"].shape[2]
+    b, mb = block_tables.shape
+    bi = jnp.minimum(length // bs, mb - 1)
+    blk = block_tables[jnp.arange(b), bi]
+    off = length % bs
+
+    def wr(pool, new):                      # new: (L, B, 1, Hkv, D)
+        return pool.at[:, blk, off].set(new[:, :, 0].astype(pool.dtype))
+
+    return {"k": wr(kv["k"], upd["k_new"]), "v": wr(kv["v"], upd["v_new"])}
+
+
+def decode_step_paged(
+    params: Params, cfg: ArchConfig, token: jax.Array, cache: Dict,
+    block_tables: jax.Array, attn_backend: Optional[str] = None,
+) -> Tuple[jax.Array, Dict]:
+    """One paged serving step: token (B,1) -> (logits (B,1,V), new cache).
+
+    The inner attention gathers each slot's pages into the same
+    ``(B, max_len, H_kv, D)`` view :func:`decode_step` reads, then runs
+    the identical per-slot-length decode attention — greedy outputs are
+    bit-exact with the contiguous path. ``attn_backend`` instead routes
+    the attention core through a registered paged-attention kernel
+    (``kernels/paged_attention.py``; ``reference`` / ``pallas-interpret``
+    / ``pallas``) that never materializes the gathered view.
+    """
+    _check_paged_family(cfg)
+    length = cache["length"]
+    x = L.apply_embedding(params["embed"], token)
+
+    paged_fn = None
+    if attn_backend is not None:
+        from repro.kernels import registry as _registry
+
+        paged_fn = _registry.get_backend(attn_backend).paged_attention
+        if paged_fn is None:
+            raise ValueError(
+                f"kernel backend {attn_backend!r} does not implement "
+                f"paged_attention"
+            )
+        if cfg.sliding_window > 0:
+            raise ValueError(
+                "paged-attention kernels implement full causal attention; "
+                "sliding-window families use the inline gather path "
+                "(attn_backend=None)"
+            )
+
+    def body(x_, xs):
+        lp, k_l, v_l = xs
+        if paged_fn is None:
+            kv = {"k": _gather_pages(k_l, block_tables),
+                  "v": _gather_pages(v_l, block_tables)}
+            return _attn_decode_one(lp, x_, kv, length, cfg, params=params)
+        return _attn_decode_one_paged_kernel(
+            lp, x_, k_l, v_l, block_tables, length, cfg, paged_fn
+        )
+
+    x, kv_upd = jax.lax.scan(
+        body, x, (params["blocks"], cache["kv"]["k"], cache["kv"]["v"])
+    )
+    new_cache = {
+        "kv": _commit_kv_paged(cache["kv"], kv_upd, length, block_tables),
+        "length": length + 1,
+    }
+    x = L.apply_norm(cfg.norm_type, params["final_norm"], x)
+    logits = L.apply_lm_head(params["embed"], x, params.get("lm_head"))
+    return logits, new_cache
+
+
+def _attn_decode_one_paged_kernel(lp, x, k_pool, v_pool, block_tables,
+                                  length, cfg: ArchConfig, paged_fn):
+    """One block's decode step with the attention core dispatched to a
+    registered paged-attention kernel (block-table indirection inside
+    the kernel instead of a gathered KV view)."""
+    q = cfg.quant
+    acfg = attn_config(cfg)
+    b = x.shape[0]
+    lv = jnp.broadcast_to(length, (b,)) if jnp.ndim(length) == 0 else length
+    xin = L.apply_norm(cfg.norm_type, lp["norm1"], x)
+    qh, k_new, v_new, _ = attn_mod._project_qkv(
+        lp["attn"], xin, acfg, q, lv[:, None]
+    )
+    ctx = paged_fn(
+        qh[:, 0], k_pool, v_pool, block_tables, lv,
+        k_new[:, 0].astype(k_pool.dtype), v_new[:, 0].astype(v_pool.dtype),
+    )
+    ctx = ctx.astype(x.dtype).reshape(b, 1, acfg.n_heads * acfg.head_dim)
+    h, _ = apply_linear(lp["attn"]["wo"], ctx, q)
+    kv_out = {"k_new": k_new.astype(k_pool.dtype),
+              "v_new": v_new.astype(v_pool.dtype)}
+    return _ffn_block(lp, x + h, cfg, q), kv_out
+
+
+def _prefix_sdpa(q, k_new, v_new, k_pref, v_pref, prefix_len, window: int):
+    """Suffix-prefill attention: queries at ``prefix_len + i`` attend the
+    cached prefix pages (masked to ``kpos < prefix_len``) plus the
+    causal suffix — one softmax over both column groups, decode-style.
+    """
+    b, w, h, d = q.shape
+    hk = k_new.shape[2]
+    g = h // hk
+    s = k_pref.shape[1]
+    qh = q.reshape(b, w, hk, g, d)
+    lp_past = jnp.einsum(
+        "bskgd,btkd->bkgst", qh.astype(k_pref.dtype), k_pref,
+        preferred_element_type=jnp.float32,
+    )
+    kpos = jnp.arange(s)
+    qpos = prefix_len[:, None] + jnp.arange(w)[None, :]           # (b, w)
+    valid = jnp.broadcast_to(
+        kpos[None, None, :] < prefix_len[:, None, None], (b, w, s)
+    )
+    if window > 0:
+        valid &= kpos[None, None, :] > qpos[:, :, None] - window
+    lp_past = jnp.where(valid[:, None, None], lp_past, attn_mod.NEG_INF)
+    lp_self = jnp.einsum(
+        "bskgd,btkd->bkgst", qh.astype(k_new.dtype), k_new,
+        preferred_element_type=jnp.float32,
+    )
+    i = jnp.arange(w)
+    self_valid = i[None, :] <= i[:, None]                          # (wq, wk)
+    if window > 0:
+        self_valid &= i[None, :] > i[:, None] - window
+    lp_self = jnp.where(self_valid[None, None, None], lp_self,
+                        attn_mod.NEG_INF)
+    scale = 1.0 / math.sqrt(d)
+    full = jnp.concatenate([lp_past, lp_self], axis=-1) * scale
+    probs = jax.nn.softmax(full.astype(jnp.float32), axis=-1)
+    p_past, p_self = probs[..., :s], probs[..., s:]
+    ctx = jnp.einsum(
+        "bkgst,btkd->bskgd", p_past.astype(k_pref.dtype), v_pref,
+        preferred_element_type=jnp.float32,
+    ) + jnp.einsum(
+        "bkgst,btkd->bskgd", p_self.astype(v_new.dtype), v_new,
+        preferred_element_type=jnp.float32,
+    )
+    return ctx.astype(q.dtype).reshape(b, w, h * d)
+
+
+def prefill_paged_suffix(
+    params: Params, cfg: ArchConfig, tokens: jax.Array, cache: Dict,
+    block_tables: jax.Array, prefix_len,
+) -> Tuple[jax.Array, Dict]:
+    """Prefill ONLY a prompt's un-cached suffix against reused pages.
+
+    ``tokens`` (B, W) are the suffix tokens (right-padded); the cached
+    prefix K/V — ``prefix_len`` tokens already sitting in the slot's
+    pages via the radix index — is read through ``block_tables``
+    (B, MB). RoPE positions are offset by ``prefix_len`` and every
+    suffix query attends [cached prefix, causal suffix] in one softmax,
+    so the result matches a full-prompt prefill. Returns
+    ``(suffix logits (B, W, V), {"k", "v"} stacked (L, B, W, Hkv, D))``
+    ready for :func:`paged_cache_insert` at ``start=prefix_len``.
+    """
+    _check_paged_family(cfg)
+    q = cfg.quant
+    acfg = attn_config(cfg)
+    b, w = tokens.shape
+    lv = (jnp.broadcast_to(prefix_len, (b,))
+          if jnp.ndim(prefix_len) == 0 else prefix_len)
+    x = L.apply_embedding(params["embed"], tokens)
+    positions = lv[:, None] + jnp.arange(w)[None, :]
+
+    def body(x_, xs):
+        lp, k_l, v_l = xs
+        xin = L.apply_norm(cfg.norm_type, lp["norm1"], x_)
+        qh, kh, vh, _ = attn_mod._project_qkv(lp["attn"], xin, acfg, q,
+                                              positions)
+        ctx = _prefix_sdpa(
+            qh, kh, vh,
+            _gather_pages(k_l, block_tables),
+            _gather_pages(v_l, block_tables),
+            lv, cfg.sliding_window,
+        )
+        h, _ = apply_linear(lp["attn"]["wo"], ctx, q)
+        x2 = _ffn_block(lp, x_ + h, cfg, q)
+        return x2, (kh.astype(k_l.dtype), vh.astype(v_l.dtype))
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["blocks"], cache["kv"]["k"], cache["kv"]["v"])
+    )
+    x = L.apply_norm(cfg.norm_type, params["final_norm"], x)
+    logits = L.apply_lm_head(params["embed"], x, params.get("lm_head"))
+    return logits, {"k": ks, "v": vs}
+
+
+# ---------------------------------------------------------------------------
 # decode step
 # ---------------------------------------------------------------------------
 
@@ -186,6 +498,23 @@ def _commit_kv(kv, upd, length):
     }
 
 
+def _ffn_block(lp, x, cfg: ArchConfig, q):
+    """Post-attention block tail (norm2 + MoE-or-MLP, dense residual)
+    shared by the prefill, decode and paged-suffix paths."""
+    z = L.apply_norm(cfg.norm_type, lp["norm2"], x)
+    if "moe" in lp:
+        h, _ = moe_mod.apply_moe(
+            lp["moe"], z, cfg.n_experts, cfg.moe_top_k, q,
+            act=cfg.act, chunk_size=cfg.moe_chunk, impl=cfg.moe_impl,
+        )
+        if cfg.dense_residual:
+            h2, _ = L.apply_mlp(lp["mlp"], z, cfg.act, q)
+            h = h + h2
+    else:
+        h, _ = L.apply_mlp(lp["mlp"], z, cfg.act, q)
+    return x + h
+
+
 def _attn_decode_one(lp, x, kv, length, cfg: ArchConfig, params=None,
                      shared: bool = False, cross_cache=None):
     q = cfg.quant
@@ -212,18 +541,7 @@ def _attn_decode_one(lp, x, kv, length, cfg: ArchConfig, params=None,
             cross_cache, attn_config(cfg), q,
         )
         x = x + h
-    z = L.apply_norm(cfg.norm_type, lp["norm2"], x)
-    if "moe" in lp:
-        h, _ = moe_mod.apply_moe(
-            lp["moe"], z, cfg.n_experts, cfg.moe_top_k, q,
-            act=cfg.act, chunk_size=cfg.moe_chunk, impl=cfg.moe_impl,
-        )
-        if cfg.dense_residual:
-            h2, _ = L.apply_mlp(lp["mlp"], z, cfg.act, q)
-            h = h + h2
-    else:
-        h, _ = L.apply_mlp(lp["mlp"], z, cfg.act, q)
-    return x + h, kv_out
+    return _ffn_block(lp, x, cfg, q), kv_out
 
 
 def decode_step(
@@ -410,18 +728,7 @@ def prefill(
                 attn_config(cfg), q, xkv=cross,
             )
             x_ = x_ + h
-        z = L.apply_norm(cfg.norm_type, lp["norm2"], x_)
-        if "moe" in lp:
-            h, _ = moe_mod.apply_moe(
-                lp["moe"], z, cfg.n_experts, cfg.moe_top_k, q,
-                act=cfg.act, chunk_size=cfg.moe_chunk, impl=cfg.moe_impl,
-            )
-            if cfg.dense_residual:
-                h2, _ = L.apply_mlp(lp["mlp"], z, cfg.act, q)
-                h = h + h2
-        else:
-            h, _ = L.apply_mlp(lp["mlp"], z, cfg.act, q)
-        return x_ + h, (kh, vh)
+        return _ffn_block(lp, x_, cfg, q), (kh, vh)
 
     def write_kv(kv_stacked, k_layers, v_layers):
         k = jax.lax.dynamic_update_slice_in_dim(

@@ -60,6 +60,7 @@ RULES_2D: Dict[str, MeshAxes] = {
     "ssm_inner": "model",
     "kv_seq": None,        # decode KV cache sequence dim
     "long_kv_seq": "data",  # 500k-context decode: cache sharded over data
+    "kv_blocks": "data",   # paged KV page pool: pages spread over data
     "sf_out": "model",     # PSQ scale-factor column dim (follows weight out)
     "ktiles": None,
 }

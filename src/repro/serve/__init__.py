@@ -1,7 +1,10 @@
-"""Serving: continuous-batching engine + weight-stationary PSQ cache.
+"""Serving: continuous-batching engine + weight-stationary PSQ cache
++ paged KV cache with shared-prefix reuse.
 
 See docs/serving.md for the engine lifecycle (submit -> bucketed prefill
--> slot admission -> per-step retirement) and the backend matrix.
+-> slot admission -> per-step retirement) and the backend matrix, and
+docs/memory.md for the paged KV layout (block pool, radix prefix index,
+copy-on-write/refcount rules).
 """
 from repro.serve.cache import (  # noqa: F401
     PackedLayer,
@@ -13,4 +16,10 @@ from repro.serve.engine import (  # noqa: F401
     Request,
     ServeEngine,
     throughput_stats,
+)
+from repro.serve.paged_kv import (  # noqa: F401
+    BlockPool,
+    PagedKVManager,
+    PoolExhausted,
+    RadixPrefixIndex,
 )

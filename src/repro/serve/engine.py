@@ -24,6 +24,16 @@ scheduling modes share one API:
     finishes. Exact for SSM/xLSTM/hybrid states (whose prefill cannot
     skip pad tokens) and for encdec/VLM side inputs.
 
+The continuous scheduler supports two KV layouts
+(``EngineConfig.paged``): the default contiguous per-slot stripe, and
+the paged block pool (``serve/paged_kv.py`` + ``models/decode.py``'s
+``decode_step_paged``) — fixed-size KV pages reached through per-slot
+block tables, with a token-prefix radix index that lets admission reuse
+already-prefilled shared-prefix pages and prefill only the un-cached
+suffix. Retirement releases page refcounts instead of abandoning a
+stripe; reused prefixes cut prefill work without changing greedy
+outputs (docs/memory.md).
+
 PSQ-trained models serve through either mode from the weight-stationary
 ``PackedLayer`` cache (``serve.cache.pack_tree_psq``) — quantize + pack
 once at load, stream activations past the packed state on every step:
@@ -54,6 +64,7 @@ from jax.sharding import Mesh
 from repro.configs.base import ArchConfig
 from repro.models import decode as D
 from repro.parallel.sharding import RULES_2D, axis_rules
+from repro.serve.paged_kv import PagedKVManager
 
 PyTree = Any
 
@@ -88,6 +99,12 @@ class EngineConfig:
     mode: str = "auto"            # auto | continuous | static
     prefill_batch: int = 4        # max requests per bucketed prefill call
     min_bucket: int = 8           # smallest prompt-length bucket
+    # paged KV layout (continuous scheduler only; see docs/memory.md)
+    paged: bool = False           # page pool + block tables vs stripes
+    block_size: int = 16          # tokens per KV page (divides max_len)
+    num_blocks: int = 0           # pool pages; 0 => auto (2x slot capacity)
+    prefix_reuse: bool = True     # radix-index shared-prefix reuse
+    paged_attn_backend: Optional[str] = None  # None => inline gather path
 
 
 def _next_pow2(n: int) -> int:
@@ -128,8 +145,75 @@ class ServeEngine:
         # scheduler telemetry (continuous mode)
         self.decode_steps = 0
         self.prefill_calls = 0
+        self.prefill_tokens = 0          # true (unpadded) tokens prefilled
+        self.cached_prefix_tokens = 0    # prompt tokens served from pages
         self.step_occupancy: List[float] = []
         self.admissions: List[Dict[str, int]] = []   # {step, uid, slot}
+
+        # paged KV layout: host-side pool/table/index bookkeeping plus a
+        # PERSISTENT device page pool — prefix pages indexed in one run
+        # are reused by the next, so the cache must outlive run()
+        self._mgr = None
+        self._kv_cache = None
+        if ecfg.paged:
+            if self.mode != "continuous":
+                raise ValueError(
+                    f"paged KV cache requires the continuous scheduler "
+                    f"(KV-cache families {_CONTINUOUS_FAMILIES}); resolved "
+                    f"mode is {self.mode!r}"
+                )
+            if ecfg.max_len % ecfg.block_size:
+                raise ValueError(
+                    f"max_len ({ecfg.max_len}) must be a multiple of "
+                    f"block_size ({ecfg.block_size})"
+                )
+            mb = ecfg.max_len // ecfg.block_size
+            nb = ecfg.num_blocks or (1 + 2 * ecfg.max_batch * mb)
+            if mesh is not None:
+                dsz = mesh.shape.get("data", 1)    # divisibility for the
+                nb = -(-nb // dsz) * dsz           # kv_blocks->data rule
+            self._mgr = PagedKVManager(
+                ecfg.max_batch, ecfg.block_size, nb, mb,
+                prefix_reuse=ecfg.prefix_reuse,
+            )
+            with self._ctx():
+                self._kv_cache = D.paged_cache_init(
+                    params, cfg, ecfg.max_batch, ecfg.max_len,
+                    ecfg.block_size, nb, dtype=jnp.float32,
+                )
+
+            def _decode_paged(p, tok, cache, bt):
+                with self._ctx():
+                    return D.decode_step_paged(
+                        p, cfg, tok, cache, bt,
+                        attn_backend=ecfg.paged_attn_backend,
+                    )
+
+            def _insert_paged(cache, src_kv, row, slot, slot_row, start,
+                              total):
+                with self._ctx():
+                    return D.paged_cache_insert(
+                        cache, src_kv, row, slot, slot_row, start, total
+                    )
+
+            def _prefill_suffix(p, toks, cache, slot_row, plen):
+                with self._ctx():
+                    return D.prefill_paged_suffix(
+                        p, cfg, toks, cache, slot_row, plen
+                    )
+
+            def _copy_page(cache, src, dst):
+                # copy-on-write: duplicate one page across all layers
+                kv = cache["kv"]
+                return {**cache, "kv": {
+                    "k": kv["k"].at[:, dst].set(kv["k"][:, src]),
+                    "v": kv["v"].at[:, dst].set(kv["v"][:, src]),
+                }}
+
+            self._decode_paged = jax.jit(_decode_paged, donate_argnums=(2,))
+            self._insert_paged = jax.jit(_insert_paged, donate_argnums=(0,))
+            self._prefill_suffix = jax.jit(_prefill_suffix)
+            self._copy_page = jax.jit(_copy_page, donate_argnums=(0,))
 
         # static path: prefill allocates the full decode-capacity cache
         def _prefill_full(p, b):
@@ -212,7 +296,9 @@ class ServeEngine:
         return r.uid
 
     def run(self) -> List[Request]:
-        """Drain the queue; returns finished requests with outputs."""
+        """Serve every queued request to completion; returns them with
+        outputs (continuous: per-step retirement + mid-flight admission;
+        static: fixed batches decoded in lockstep)."""
         if self.mode == "continuous":
             self._run_continuous()
         else:
@@ -224,24 +310,34 @@ class ServeEngine:
 
     def reset_stats(self) -> None:
         """Clear finished requests + scheduler telemetry (keeps compiled
-        functions warm) — so benchmarks can measure a post-warm-up run."""
+        functions warm AND the paged prefix index populated) — so
+        benchmarks can measure a post-warm-up run."""
         self.finished = []
         self.decode_steps = 0
         self.prefill_calls = 0
+        self.prefill_tokens = 0
+        self.cached_prefix_tokens = 0
         self.step_occupancy = []
         self.admissions = []
+        if self._mgr is not None:
+            self._mgr.reset_counters()   # telemetry only; pages/index kept
 
     def stats(self) -> Dict[str, float]:
         occ = float(np.mean(self.step_occupancy)) if self.step_occupancy else 0.0
-        return {
+        out = {
             "mode": self.mode,
             "decode_steps": self.decode_steps,
             "prefill_calls": self.prefill_calls,
+            "prefill_tokens": self.prefill_tokens,
+            "cached_prefix_tokens": self.cached_prefix_tokens,
             "mean_slot_occupancy": occ,
             "admissions": len(self.admissions),
             "mesh": (None if self.mesh is None else
                      "x".join(f"{k}={v}" for k, v in self.mesh.shape.items())),
         }
+        if self._mgr is not None:
+            out["paged"] = self._mgr.stats()
+        return out
 
     # -- shared -------------------------------------------------------------
     def _sample(self, logits: jax.Array) -> jax.Array:
@@ -288,6 +384,7 @@ class ServeEngine:
             toks[i, : len(r.prompt)] = r.prompt      # RIGHT-padded: causal
         logits, pcache = self._prefill_bucket(self.params, jnp.asarray(toks))
         self.prefill_calls += 1
+        self.prefill_tokens += sum(len(r.prompt) for r in take)
         # each row's next token comes from its true last prompt position
         idx = jnp.asarray([len(r.prompt) - 1 for r in take]
                           + [0] * (mp - m))
@@ -309,38 +406,180 @@ class ServeEngine:
                 {"step": self.decode_steps, "uid": r.uid, "slot": slot})
         return cache
 
+    def _place_admitted(self, r: Request, slot: int, token: int,
+                        slots: List[Optional[Request]],
+                        last_tok: np.ndarray, now: float) -> None:
+        """Record a freshly-admitted request in its slot (or retire it on
+        the spot when the prefill token already finishes it)."""
+        r.t_first_token = now
+        r.output.append(token)
+        if token == r.eos_id or len(r.output) >= r.max_new_tokens:
+            self._retire(r, now)
+            self._mgr.retire(slot)     # pages freed; the prefix stays indexed
+            return
+        slots[slot] = r
+        r.slot = slot
+        last_tok[slot] = token
+        self.admissions.append(
+            {"step": self.decode_steps, "uid": r.uid, "slot": slot})
+
+    def _admit_paged(self, cache, slots: List[Optional[Request]],
+                     last_tok: np.ndarray, free: List[int]):
+        """Admit from the queue into free slots through the radix index.
+
+        A queue head with a cached shared prefix admits alone: the
+        reused pages are ref-bumped into its block table and ONLY the
+        un-cached suffix is prefilled against them
+        (``models.decode.prefill_paged_suffix``). Cold requests batch
+        through the same pow2-bucketed prefill as the contiguous path,
+        then scatter into their private pages. Either way, the prompt's
+        full pages are published to the index for later requests.
+        """
+        if self._mgr.match_tokens([int(t) for t in self.queue[0].prompt]):
+            return self._admit_paged_suffix(cache, slots, last_tok, free)
+        return self._admit_paged_cold(cache, slots, last_tok, free)
+
+    def _admit_paged_suffix(self, cache, slots, last_tok, free):
+        r = self.queue.pop(0)
+        slot = free.pop(0)
+        prompt = [int(t) for t in r.prompt]
+        cached = self._mgr.admit(slot, prompt)
+        suffix = r.prompt[cached:]
+        w = self._bucket(len(suffix))
+        toks = np.zeros((1, w), np.int32)
+        toks[0, :len(suffix)] = suffix
+        # gather only a pow2 bucket of prefix pages, not the whole
+        # table — suffix attention width scales with the prefix, and
+        # compile count stays one per (suffix, prefix) bucket pair
+        bs = self.ecfg.block_size
+        pb = min(_next_pow2(-(-cached // bs)), len(self._mgr.tables[slot]))
+        logits, src = self._prefill_suffix(
+            self.params, jnp.asarray(toks), cache,
+            jnp.asarray(self._mgr.tables[slot][:pb])[None],
+            np.int32(cached),
+        )
+        self.prefill_calls += 1
+        self.prefill_tokens += len(suffix)
+        self.cached_prefix_tokens += cached
+        cache = self._insert_paged(
+            cache, src, 0, slot, jnp.asarray(self._mgr.tables[slot]),
+            np.int32(cached), len(prompt))
+        self._mgr.register(slot, prompt)
+        first = np.asarray(self._sample(logits[:, len(suffix) - 1]))
+        self._place_admitted(r, slot, int(first[0]), slots, last_tok,
+                             time.time())
+        return cache
+
+    def _admit_paged_cold(self, cache, slots, last_tok, free):
+        # same take policy as the contiguous _admit: the queue head plus
+        # FIFO-later requests sharing its length bucket — but only other
+        # index misses (a hit admits alone through the suffix path)
+        head = self.queue[0]
+        w = self._bucket(len(head.prompt))
+        limit = min(len(free), self.ecfg.prefill_batch)
+        take = [head]
+        for r in self.queue[1:]:
+            if len(take) >= limit:
+                break
+            if (self._bucket(len(r.prompt)) == w
+                    and not self._mgr.match_tokens(
+                        [int(t) for t in r.prompt])):
+                take.append(r)
+        for r in take:
+            self.queue.remove(r)
+
+        m = len(take)
+        mp = min(_next_pow2(m), self.ecfg.prefill_batch)
+        toks = np.zeros((mp, w), np.int32)
+        for i, r in enumerate(take):
+            toks[i, : len(r.prompt)] = r.prompt      # RIGHT-padded: causal
+        # claim pages first so nothing registers mid-batch: identical
+        # prompts inside one cold batch each prefill privately (the
+        # second one hits the index only on a LATER admission)
+        placed = []
+        for i, r in enumerate(take):
+            slot = free.pop(0)
+            prompt = [int(t) for t in r.prompt]
+            self._mgr.admit(slot, prompt)
+            placed.append((i, r, slot, prompt))
+        logits, pcache = self._prefill_bucket(self.params, jnp.asarray(toks))
+        self.prefill_calls += 1
+        self.prefill_tokens += sum(len(r.prompt) for r in take)
+        idx = jnp.asarray([len(r.prompt) - 1 for r in take] + [0] * (mp - m))
+        first = np.asarray(self._sample(logits[jnp.arange(mp), idx]))
+        now = time.time()
+        for i, r, slot, prompt in placed:
+            cache = self._insert_paged(
+                cache, pcache["kv"], i, slot,
+                jnp.asarray(self._mgr.tables[slot]), np.int32(0),
+                len(prompt))
+            self._mgr.register(slot, prompt)
+            self._place_admitted(r, slot, int(first[i]), slots, last_tok,
+                                 now)
+        return cache
+
     def _run_continuous(self):
         n = self.ecfg.max_batch
-        # under a mesh, constrain() shards the slot axis over "data"
-        # eagerly here, so decode-step donation reuses the placed buffers
-        with self._ctx():
-            cache = D.cache_init(self.params, self.cfg, n, self.ecfg.max_len,
-                                 dtype=jnp.float32)
+        paged = self.ecfg.paged
+        if paged:
+            # persistent pool: pages indexed in an earlier run() still
+            # hold their prefilled KV, so the cache outlives the run
+            cache = self._kv_cache
+        else:
+            # under a mesh, constrain() shards the slot axis over "data"
+            # eagerly here, so decode-step donation reuses placed buffers
+            with self._ctx():
+                cache = D.cache_init(self.params, self.cfg, n,
+                                     self.ecfg.max_len, dtype=jnp.float32)
         slots: List[Optional[Request]] = [None] * n
         last_tok = np.zeros((n,), np.int32)
-        while self.queue or any(s is not None for s in slots):
-            # admission at the decode-step boundary
-            while self.queue and any(s is None for s in slots):
-                free = [i for i, s in enumerate(slots) if s is None]
-                cache = self._admit(cache, slots, last_tok, free)
-            if not any(s is not None for s in slots):
-                continue                             # all admits retired at t=1
-            self.step_occupancy.append(
-                sum(s is not None for s in slots) / n)
-            logits, cache = self._decode(
-                self.params, jnp.asarray(last_tok)[:, None], cache)
-            nxt = np.asarray(self._sample(logits[:, 0]))
-            self.decode_steps += 1
-            now = time.time()
-            for i, r in enumerate(slots):
-                if r is None:
-                    continue
-                t = int(nxt[i])
-                r.output.append(t)
-                last_tok[i] = t
-                if t == r.eos_id or len(r.output) >= r.max_new_tokens:
-                    self._retire(r, now)
-                    slots[i] = None                  # freed THIS step
+        try:
+            while self.queue or any(s is not None for s in slots):
+                # admission at the decode-step boundary
+                while self.queue and any(s is None for s in slots):
+                    free = [i for i, s in enumerate(slots) if s is None]
+                    if paged:
+                        cache = self._admit_paged(cache, slots, last_tok,
+                                                  free)
+                    else:
+                        cache = self._admit(cache, slots, last_tok, free)
+                if not any(s is not None for s in slots):
+                    continue                         # all admits retired at t=1
+                self.step_occupancy.append(
+                    sum(s is not None for s in slots) / n)
+                if paged:
+                    # grow each live slot's table by one token (a fresh
+                    # page at block boundaries, copy-on-write if shared)
+                    for i, s in enumerate(slots):
+                        if s is None:
+                            continue
+                        cow = self._mgr.prepare_append(i)
+                        if cow is not None:
+                            cache = self._copy_page(cache, *cow)
+                    logits, cache = self._decode_paged(
+                        self.params, jnp.asarray(last_tok)[:, None], cache,
+                        jnp.asarray(self._mgr.tables))
+                else:
+                    logits, cache = self._decode(
+                        self.params, jnp.asarray(last_tok)[:, None], cache)
+                nxt = np.asarray(self._sample(logits[:, 0]))
+                self.decode_steps += 1
+                now = time.time()
+                for i, r in enumerate(slots):
+                    if r is None:
+                        continue
+                    t = int(nxt[i])
+                    r.output.append(t)
+                    last_tok[i] = t
+                    if t == r.eos_id or len(r.output) >= r.max_new_tokens:
+                        self._retire(r, now)
+                        slots[i] = None              # freed THIS step
+                        if paged:
+                            self._mgr.retire(i)
+        finally:
+            if paged:
+                self._kv_cache = cache               # donated: keep the live
+                # handle so the next run() reuses indexed prefix pages
 
     # -- static batching ------------------------------------------------------
     def _pad_prompts(self, reqs: List[Request]) -> np.ndarray:
@@ -366,6 +605,7 @@ class ServeEngine:
             b["patch_embeds"] = jnp.asarray(self.extra["patch_embeds"])[: len(reqs)]
         logits, cache = self._prefill_full(self.params, b)
         self.prefill_calls += 1
+        self.prefill_tokens += sum(len(r.prompt) for r in reqs)
         nxt = self._sample(logits[:, -1])
         t_first = time.time()
         for r, t in zip(reqs, np.asarray(nxt)):

@@ -1,0 +1,438 @@
+"""Paged KV cache: fixed block pool + shared-prefix radix index.
+
+The continuous-batching engine (PR 2/3) allocates one contiguous
+``max_len`` KV stripe per decode slot and re-prefills identical system
+prompts for every request. This module replaces that stripe with the
+classic paged layout: the device holds ONE pool of fixed-size KV pages
+(``block_size`` tokens each) per layer stack, and every slot owns a
+*block table* — a row of page indices mapping sequence position
+``t`` to ``(table[t // block_size], t % block_size)``.
+
+Three host-side pieces cooperate (all device work stays in
+``models/decode.py`` / ``serve/engine.py``):
+
+``BlockPool``
+  A ref-counted allocator over page ids. Page 0 is the reserved *trash*
+  page: free slots' table rows point at it, so the fixed-shape decode
+  scatter always has somewhere harmless to write. A page is returned to
+  the free list exactly when its refcount reaches zero.
+
+``RadixPrefixIndex``
+  A token-prefix-hash chain over FULL pages of prefilled prompts: page
+  ``i`` of a prompt is keyed by ``(parent_node, tokens[i*bs:(i+1)*bs])``,
+  so ``lookup`` walks the longest already-prefilled prefix page by page.
+  The index holds one reference on every registered page; eviction is
+  LRU over *leaf* nodes whose page nobody else references (so a cached
+  chain never loses an interior page).
+
+``PagedKVManager``
+  The engine-facing facade: ``admit`` reuses cached prefix pages and
+  allocates private pages for the rest of the prompt, ``register``
+  publishes a prompt's full pages to the index, ``prepare_append``
+  grows a slot's table one token at a time during decode (allocating a
+  fresh page at every ``block_size`` boundary, copy-on-write if the
+  target page is shared), and ``retire`` drops all of a slot's
+  references. Shared pages are immutable by construction — only full
+  pages are ever published, and decode/suffix writes always land in
+  private pages — so copy-on-write is a safety valve, not a hot path.
+
+Example — two prompts sharing one full page:
+
+    >>> mgr = PagedKVManager(n_slots=2, block_size=4, num_blocks=8,
+    ...                      max_blocks=4)
+    >>> mgr.admit(0, [1, 2, 3, 4, 9])       # cold: nothing cached yet
+    0
+    >>> mgr.register(0, [1, 2, 3, 4, 9])    # publish page [1,2,3,4]
+    >>> mgr.admit(1, [1, 2, 3, 4, 7, 8])    # warm: first page reused
+    4
+    >>> int(mgr.pool.refcount(mgr.tables[1][0]))  # slot 0 + slot 1 + index
+    3
+    >>> mgr.retire(0); mgr.retire(1)
+    >>> mgr.stats()["cached_tokens"]
+    4
+
+See docs/memory.md for the full layout and eviction rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "BlockPool",
+    "PagedKVManager",
+    "PoolExhausted",
+    "RadixPrefixIndex",
+]
+
+TRASH_BLOCK = 0
+
+
+class PoolExhausted(RuntimeError):
+    """No free page and nothing evictable — the pool is undersized."""
+
+
+class BlockPool:
+    """Ref-counted allocator over ``num_blocks`` fixed-size KV pages.
+
+    Page 0 (:data:`TRASH_BLOCK`) is reserved forever — its refcount is
+    pinned so it can never be handed out, and free slots' block tables
+    point at it so masked decode writes stay in-bounds.
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("need at least 2 blocks (one is the trash page)")
+        self.num_blocks = num_blocks
+        self._ref = np.zeros(num_blocks, np.int32)
+        self._ref[TRASH_BLOCK] = 1
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+
+    def alloc(self) -> int:
+        """Hand out a free page with refcount 1; raises :class:`PoolExhausted`."""
+        if not self._free:
+            raise PoolExhausted(
+                f"no free KV page ({self.num_blocks} total)"
+            )
+        bid = self._free.pop()
+        self._ref[bid] = 1
+        return bid
+
+    def retain(self, bid: int) -> None:
+        assert self._ref[bid] > 0, f"retain of free page {bid}"
+        self._ref[bid] += 1
+
+    def release(self, bid: int) -> bool:
+        """Drop one reference; returns True when the page went free."""
+        assert bid != TRASH_BLOCK, "release of the trash page"
+        assert self._ref[bid] > 0, f"double free of page {bid}"
+        self._ref[bid] -= 1
+        if self._ref[bid] == 0:
+            self._free.append(bid)
+            return True
+        return False
+
+    def refcount(self, bid: int) -> int:
+        return int(self._ref[bid])
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        # excludes the trash page
+        return self.num_blocks - 1 - len(self._free)
+
+    def check_invariants(self) -> None:
+        """Every page is either free (ref 0) or live (ref > 0), exactly once."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate page on the free list"
+        assert TRASH_BLOCK not in free
+        for bid in range(self.num_blocks):
+            if bid == TRASH_BLOCK:
+                assert self._ref[bid] >= 1
+            elif bid in free:
+                assert self._ref[bid] == 0, f"free page {bid} has refs"
+            else:
+                assert self._ref[bid] > 0, f"live page {bid} has no refs"
+
+
+@dataclasses.dataclass
+class _Node:
+    nid: int
+    parent: int                    # parent node id (0 = root)
+    tokens: Tuple[int, ...]        # the page's block_size tokens
+    block: int                     # pool page id holding the prefilled KV
+    children: int = 0
+    tick: int = 0                  # LRU stamp
+
+
+class RadixPrefixIndex:
+    """Token-prefix-hash chain over full prefilled pages.
+
+    Each node is one FULL page of some prompt, keyed by
+    ``(parent_node_id, page_tokens)`` — the chain of keys from the root
+    is exactly the token prefix, so lookups cannot alias two different
+    prefixes (keys compare the actual tokens, the hash is only the dict
+    bucket). The index owns one pool reference per node.
+    """
+
+    _ROOT = 0
+
+    def __init__(self, pool: BlockPool, block_size: int):
+        self.pool = pool
+        self.block_size = block_size
+        self._by_key: Dict[Tuple[int, Tuple[int, ...]], _Node] = {}
+        self._by_id: Dict[int, _Node] = {}
+        self._next_id = 1
+        self._tick = 0
+
+    def __len__(self) -> int:
+        return len(self._by_key)
+
+    def _touch(self, node: _Node) -> None:
+        self._tick += 1
+        node.tick = self._tick
+
+    def _chain(self, tokens: Sequence[int], limit: Optional[int]):
+        """Yield the cached nodes covering ``tokens``, root outward."""
+        bs = self.block_size
+        n = len(tokens) if limit is None else min(limit, len(tokens))
+        parent = self._ROOT
+        for i in range(n // bs):
+            key = (parent, tuple(int(t) for t in tokens[i * bs:(i + 1) * bs]))
+            node = self._by_key.get(key)
+            if node is None:
+                return
+            yield node
+            parent = node.nid
+
+    def match_len(self, tokens: Sequence[int],
+                  limit: Optional[int] = None) -> int:
+        """Pages a :meth:`lookup` would return — no refs, no LRU touch."""
+        return sum(1 for _ in self._chain(tokens, limit))
+
+    def lookup(self, tokens: Sequence[int], limit: Optional[int] = None
+               ) -> List[int]:
+        """Longest cached full-page prefix of ``tokens``, as pool page ids.
+
+        Walks at most ``limit`` tokens (default: all). Every returned
+        page is RETAINED on behalf of the caller — the caller owns one
+        reference per page and must release them (slot retirement).
+        """
+        out: List[int] = []
+        for node in self._chain(tokens, limit):
+            self.pool.retain(node.block)
+            self._touch(node)
+            out.append(node.block)
+        return out
+
+    def insert(self, tokens: Sequence[int], blocks: Sequence[int]) -> int:
+        """Publish the full pages of ``tokens`` (held in ``blocks``).
+
+        Pages already present keep their existing node (a duplicate
+        prefilled privately stays private); new nodes retain their page
+        on behalf of the index. Returns the number of nodes added.
+        """
+        bs = self.block_size
+        added = 0
+        parent = self._ROOT
+        for i in range(len(tokens) // bs):
+            key = (parent, tuple(int(t) for t in tokens[i * bs:(i + 1) * bs]))
+            node = self._by_key.get(key)
+            if node is None:
+                node = _Node(self._next_id, parent, key[1], int(blocks[i]))
+                self._next_id += 1
+                self._by_key[key] = node
+                self._by_id[node.nid] = node
+                if parent != self._ROOT:
+                    self._by_id[parent].children += 1
+                self.pool.retain(node.block)
+                added += 1
+            self._touch(node)
+            parent = node.nid
+        return added
+
+    def _evict_one(self) -> bool:
+        """Drop the LRU leaf whose page only the index still references."""
+        best: Optional[_Node] = None
+        for node in self._by_key.values():
+            if node.children:
+                continue
+            if self.pool.refcount(node.block) != 1:
+                continue          # a live slot still reads this page
+            if best is None or node.tick < best.tick:
+                best = node
+        if best is None:
+            return False
+        del self._by_key[(best.parent, best.tokens)]
+        del self._by_id[best.nid]
+        if best.parent != self._ROOT:
+            self._by_id[best.parent].children -= 1
+        self.pool.release(best.block)
+        return True
+
+    def evict(self, n_blocks: int) -> int:
+        """Free up to ``n_blocks`` pages, LRU-leaf-first; returns #freed."""
+        freed = 0
+        while freed < n_blocks and self._evict_one():
+            freed += 1
+        return freed
+
+
+class PagedKVManager:
+    """Host-side paged-KV bookkeeping for one decode slot pool.
+
+    Device state (the page pool tensors) lives in the engine; this class
+    owns the allocator, the block tables (a ``(n_slots, max_blocks)``
+    int32 array whose rows feed the gather-based paged decode step) and
+    the shared-prefix index. ``prefix_reuse=False`` keeps the paged
+    layout but never consults or fills the index.
+    """
+
+    def __init__(self, n_slots: int, block_size: int, num_blocks: int,
+                 max_blocks: int, prefix_reuse: bool = True):
+        self.n_slots = n_slots
+        self.block_size = block_size
+        self.max_blocks = max_blocks
+        self.prefix_reuse = prefix_reuse
+        self.pool = BlockPool(num_blocks)
+        self.index = RadixPrefixIndex(self.pool, block_size)
+        self.tables = np.zeros((n_slots, max_blocks), np.int32)
+        self.lengths = np.zeros(n_slots, np.int64)
+        self._slot_blocks: List[List[int]] = [[] for _ in range(n_slots)]
+        # telemetry
+        self.cached_tokens = 0      # prompt tokens served from the index
+        self.cow_copies = 0
+        self.evictions = 0
+
+    # -- allocation ---------------------------------------------------------
+    def _alloc(self) -> int:
+        try:
+            return self.pool.alloc()
+        except PoolExhausted:
+            self.evictions += self.index.evict(1)
+            return self.pool.alloc()   # raises again if eviction found nothing
+
+    # -- request lifecycle --------------------------------------------------
+    def match_tokens(self, prompt: Sequence[int]) -> int:
+        """Prompt tokens :meth:`admit` would serve from the index — a
+        non-mutating probe (no refs, no LRU touch) with the same
+        last-token re-prefill guard, so schedulers can route cold
+        requests to batched prefill without touching index state."""
+        if not self.prefix_reuse or len(prompt) < 2:
+            return 0
+        return (self.index.match_len(prompt, limit=len(prompt) - 1)
+                * self.block_size)
+
+    def admit(self, slot: int, prompt: Sequence[int]) -> int:
+        """Install ``prompt``'s block table into ``slot``.
+
+        Reuses cached prefix pages (full pages only, and never the whole
+        prompt — at least one token is always re-prefilled so admission
+        has logits to sample the first output from) and allocates
+        private pages for the rest. Returns the number of prompt tokens
+        whose KV is already in the pool — the engine prefills only
+        ``prompt[cached:]``.
+        """
+        assert not self._slot_blocks[slot], f"slot {slot} already occupied"
+        plen = len(prompt)
+        assert plen >= 1
+        cached: List[int] = []
+        if self.prefix_reuse:
+            # limit = plen - 1: the last token is always recomputed
+            cached = self.index.lookup(prompt, limit=plen - 1)
+        n_cached_tok = len(cached) * self.block_size
+        n_total = -(-plen // self.block_size)      # ceil
+        fresh: List[int] = []
+        try:
+            for _ in range(n_total - len(cached)):
+                fresh.append(self._alloc())
+        except PoolExhausted:
+            # undo the partial claim: an undersized pool must not leak
+            # the refs lookup() took or the pages already allocated
+            for bid in cached + fresh:
+                self.pool.release(bid)
+            raise
+        blocks = cached + fresh
+        self._slot_blocks[slot] = blocks
+        self.tables[slot, :] = TRASH_BLOCK
+        self.tables[slot, :len(blocks)] = blocks
+        self.lengths[slot] = plen
+        self.cached_tokens += n_cached_tok
+        return n_cached_tok
+
+    def register(self, slot: int, prompt: Sequence[int]) -> None:
+        """Publish the slot's full prompt pages to the prefix index."""
+        if self.prefix_reuse:
+            self.index.insert(prompt, self._slot_blocks[slot])
+
+    def prepare_append(self, slot: int) -> Optional[Tuple[int, int]]:
+        """Make position ``lengths[slot]`` writable; advance the length.
+
+        Called once per live slot before every decode step. Allocates a
+        fresh page at each ``block_size`` boundary. If the target page
+        is shared (refcount > 1 — cannot happen under the full-page
+        publishing rule, but kept as the copy-on-write safety valve),
+        replaces it with a private copy and returns ``(src, dst)`` page
+        ids so the engine copies the device contents; otherwise None.
+        """
+        pos = int(self.lengths[slot])
+        bi = pos // self.block_size
+        assert bi < self.max_blocks, f"slot {slot} grew past its table"
+        blocks = self._slot_blocks[slot]
+        cow: Optional[Tuple[int, int]] = None
+        if bi == len(blocks):
+            bid = self._alloc()
+            blocks.append(bid)
+            self.tables[slot, bi] = bid
+        elif self.pool.refcount(blocks[bi]) > 1:
+            src = blocks[bi]
+            dst = self._alloc()
+            self.pool.release(src)
+            blocks[bi] = dst
+            self.tables[slot, bi] = dst
+            self.cow_copies += 1
+            cow = (src, dst)
+        self.lengths[slot] = pos + 1
+        return cow
+
+    def fork(self, src_slot: int, dst_slot: int) -> None:
+        """Share ``src_slot``'s whole table with ``dst_slot`` (ref-bumped).
+
+        The copy-on-write path in :meth:`prepare_append` keeps both
+        slots correct once either starts writing. Exercised by the
+        property tests; the greedy engine itself never forks.
+        """
+        assert not self._slot_blocks[dst_slot]
+        blocks = list(self._slot_blocks[src_slot])
+        for bid in blocks:
+            self.pool.retain(bid)
+        self._slot_blocks[dst_slot] = blocks
+        self.tables[dst_slot, :] = self.tables[src_slot, :]
+        self.lengths[dst_slot] = self.lengths[src_slot]
+
+    def retire(self, slot: int) -> None:
+        """Release every page the slot references; clear its table row."""
+        for bid in self._slot_blocks[slot]:
+            self.pool.release(bid)
+        self._slot_blocks[slot] = []
+        self.tables[slot, :] = TRASH_BLOCK
+        self.lengths[slot] = 0
+
+    # -- introspection ------------------------------------------------------
+    def reset_counters(self) -> None:
+        """Zero the telemetry counters (cached/CoW/eviction tallies).
+
+        Pool and index STATE — live pages, tables, cached chains — is
+        untouched: resetting telemetry must not drop the prefix cache.
+        """
+        self.cached_tokens = 0
+        self.cow_copies = 0
+        self.evictions = 0
+
+    def slot_blocks(self, slot: int) -> List[int]:
+        return list(self._slot_blocks[slot])
+
+    def check_invariants(self) -> None:
+        self.pool.check_invariants()
+        for s, blocks in enumerate(self._slot_blocks):
+            for i, bid in enumerate(blocks):
+                assert self.tables[s, i] == bid
+                assert self.pool.refcount(bid) >= 1
+            for i in range(len(blocks), self.max_blocks):
+                assert self.tables[s, i] == TRASH_BLOCK
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "num_blocks": self.pool.num_blocks,
+            "used_blocks": self.pool.used_blocks,
+            "free_blocks": self.pool.free_blocks,
+            "indexed_blocks": len(self.index),
+            "cached_tokens": self.cached_tokens,
+            "cow_copies": self.cow_copies,
+            "evictions": self.evictions,
+        }
