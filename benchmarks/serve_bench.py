@@ -11,6 +11,12 @@ Reports tokens/s, mean TTFT and mean slot occupancy per mode plus the
 continuous/static speedup, and writes the result as JSON
 (``BENCH_serve.json``) so CI can archive the perf trajectory.
 
+The ``recurrent_continuous`` section runs the recurrent-state families
+(zamba2 hybrid, xlstm) through the same continuous-vs-static comparison
+on their own mixed-length traces: masked-length prefill makes the slot
+pool exact for recurrent state, so the delta is pure scheduling.
+``--recurrent`` runs only this section.
+
 The ``paged_prefix`` section drives the PAGED engine with a
 shared-system-prompt trace (every request = one long shared prefix + a
 short unique tail — the chat-serving regime) with prefix reuse off vs
@@ -157,18 +163,75 @@ def bench_paged_prefix(params, cfg, trace, slots: int, max_len: int,
     return out
 
 
+def bench_recurrent(args) -> Dict:
+    """Recurrent-state families on the continuous scheduler vs static.
+
+    zamba2 (hybrid: Mamba2 groups + one shared attention block) and
+    xlstm (mLSTM/sLSTM) run the same mixed-length trace through both
+    schedulers. Masked-length prefill makes the continuous slot pool
+    exact for recurrent state (models/decode.prefill), so the comparison
+    is pure scheduling: static lockstep wastes steps on retired-but-held
+    slots, the slot pool backfills them per step. Greedy outputs are
+    bit-identical between the two modes (pinned by
+    tests/test_recurrent_serving.py).
+    """
+    if args.smoke:
+        n_req, prompt_rng, new_rng = 8, (4, 16), (2, 8)
+        slots, max_len = 4, 48
+    else:
+        # decode-weighted budgets: recurrent decode steps are cheap
+        # (no KV growth), so the trace keeps slots busy long enough for
+        # scheduling — not prefill dispatch — to dominate the delta
+        n_req, prompt_rng, new_rng = args.requests, (8, 64), (16, 64)
+        slots, max_len = args.slots, 160
+    out: Dict = {
+        "requests": n_req, "prompt_len": list(prompt_rng),
+        "max_new_tokens": list(new_rng), "slots": slots, "max_len": max_len,
+    }
+    for arch in ("zamba2-7b", "xlstm-350m"):
+        cfg = get_config(arch).reduced()
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        trace = make_trace(n_req, prompt_rng, new_rng, cfg.vocab_size)
+        entry: Dict = {"family": cfg.family}
+        for mode in ("static", "continuous"):
+            entry[mode] = bench_mode(mode, params, cfg, trace, slots,
+                                     max_len, repeats=5)
+            r = entry[mode]
+            print(f"[serve_bench] recurrent {arch} {mode:10s}: "
+                  f"{r['tokens_per_s']:8.1f} tok/s  "
+                  f"occupancy {r['mean_slot_occupancy']:.2f}  "
+                  f"steps {r['decode_steps']}")
+        entry["speedup_tokens_per_s"] = (
+            entry["continuous"]["tokens_per_s"]
+            / max(entry["static"]["tokens_per_s"], 1e-9)
+        )
+        entry["occupancy_gain"] = (
+            entry["continuous"]["mean_slot_occupancy"]
+            - entry["static"]["mean_slot_occupancy"]
+        )
+        print(f"[serve_bench] recurrent {arch}: "
+              f"{entry['speedup_tokens_per_s']:.2f}x tokens/s, "
+              f"occupancy +{entry['occupancy_gain']:.2f}")
+        out[arch] = entry
+    return out
+
+
 def run(args) -> Dict:
     cfg = get_config(args.arch).reduced()
-    if args.psq_packed:
-        qcfg = dataclasses.replace(PSQ_TERNARY, kernel_backend="reference",
-                                   xbar_rows=64)
-        cfg = cfg.with_quant(qcfg)
-        params = init_model(jax.random.PRNGKey(0), cfg)
-        cache = PackedModelCache()
-        params = pack_tree_psq(params, qcfg, cache)
-        print(f"[serve_bench] packed once at load: {cache.stats()}")
-    else:
-        params = init_model(jax.random.PRNGKey(0), cfg)
+    if not args.recurrent:
+        # the recurrent section builds its own zamba2/xlstm models —
+        # don't init (or pack) an args.arch model it never serves
+        if args.psq_packed:
+            qcfg = dataclasses.replace(PSQ_TERNARY,
+                                       kernel_backend="reference",
+                                       xbar_rows=64)
+            cfg = cfg.with_quant(qcfg)
+            params = init_model(jax.random.PRNGKey(0), cfg)
+            cache = PackedModelCache()
+            params = pack_tree_psq(params, qcfg, cache)
+            print(f"[serve_bench] packed once at load: {cache.stats()}")
+        else:
+            params = init_model(jax.random.PRNGKey(0), cfg)
 
     if args.smoke:
         n_req, prompt_rng, new_rng = 8, (4, 16), (2, 8)
@@ -190,7 +253,7 @@ def run(args) -> Dict:
         "platform": jax.default_backend(),
         "devices": len(jax.devices()),
     }
-    if not args.paged:
+    if not args.paged and not args.recurrent:
         for mode in ("static", "continuous"):
             result[mode] = bench_mode(mode, params, cfg, trace, slots,
                                       max_len)
@@ -210,20 +273,28 @@ def run(args) -> Dict:
     # shared-system-prompt trace on the paged engine: a prefill-heavy
     # regime (long shared prefix, short tails and decode budgets) where
     # radix prefix reuse pays directly in admission latency
-    if args.smoke:
-        pn, pfx, tails, pnew = 8, 24, (2, 6), (2, 4)
-        pslots, pmax, pbs = 4, 64, 8
-    else:
-        pn, pfx, tails, pnew = 48, 64, (4, 12), (4, 8)
-        pslots, pmax, pbs = args.slots, 128, 16
-    ptrace = make_shared_prefix_trace(pn, pfx, tails, pnew, cfg.vocab_size)
-    result["paged_prefix"] = dict(
-        requests=pn, shared_prefix_len=pfx, tail_len=list(tails),
-        max_new_tokens=list(pnew), slots=pslots, max_len=pmax,
-        **bench_paged_prefix(params, cfg, ptrace, pslots, pmax, pbs),
-    )
+    if not args.recurrent:
+        if args.smoke:
+            pn, pfx, tails, pnew = 8, 24, (2, 6), (2, 4)
+            pslots, pmax, pbs = 4, 64, 8
+        else:
+            pn, pfx, tails, pnew = 48, 64, (4, 12), (4, 8)
+            pslots, pmax, pbs = args.slots, 128, 16
+        ptrace = make_shared_prefix_trace(pn, pfx, tails, pnew,
+                                          cfg.vocab_size)
+        result["paged_prefix"] = dict(
+            requests=pn, shared_prefix_len=pfx, tail_len=list(tails),
+            max_new_tokens=list(pnew), slots=pslots, max_len=pmax,
+            **bench_paged_prefix(params, cfg, ptrace, pslots, pmax, pbs),
+        )
 
-    if not args.paged and args.devices > 1:
+    # recurrent-state families (hybrid zamba2, xlstm) through the
+    # continuous slot pool vs the static fallback — same mixed-length
+    # trace per arch, bit-identical outputs, scheduling-only delta
+    if not args.paged:
+        result["recurrent_continuous"] = bench_recurrent(args)
+
+    if not args.paged and not args.recurrent and args.devices > 1:
         result["sharded"] = run_sharded_sweep(args)
     return result
 
@@ -287,6 +358,9 @@ def main() -> None:
                     help="tiny trace + model (CI mode)")
     ap.add_argument("--paged", action="store_true",
                     help="run only the paged shared-prefix section")
+    ap.add_argument("--recurrent", action="store_true",
+                    help="run only the recurrent-family (zamba2/xlstm) "
+                         "continuous-vs-static section")
     ap.add_argument("--devices", type=int, default=0,
                     help="CPU virtual devices for the tensor-parallel mesh "
                          "sweep (must be the first JAX use in the process)")

@@ -5,11 +5,13 @@
         [--slots 4] [--mode auto|continuous|static] \
         [--mesh DATA,MODEL] [--devices N]
 
-KV-cache families serve through the continuous-batching slot pool
-(per-step retirement + mid-flight admission, see docs/serving.md);
-recurrent/side-input families fall back to static batching. ``--paged``
-switches the slot pool to the paged KV cache — fixed-size pages, block
-tables and shared-prefix radix reuse (docs/memory.md).
+KV-cache AND recurrent-state families (SSM/xLSTM/hybrid) serve through
+the continuous-batching slot pool (per-step retirement + mid-flight
+admission, see docs/serving.md); only side-input families (encdec/VLM
+with patch embeds) fall back to static batching. ``--paged`` switches
+the slot pool to the paged KV cache — fixed-size pages, block tables
+and shared-prefix radix reuse; attention-KV families only
+(docs/memory.md).
 
 Multi-device: ``--mesh 1,4`` runs the PSQ datapath tensor-parallel over
 a 4-way ``model`` axis (packed layers column-sharded, one psum per

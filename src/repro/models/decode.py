@@ -17,8 +17,11 @@ Two KV layouts share the same decode math:
 
 * **contiguous** — one ``(B, max_len, H_kv, D)`` stripe per slot
   (``init_cache``/``cache_init``), the static path and the default
-  continuous path, and the only layout the recurrent/side-input
-  families support;
+  continuous path. Recurrent families (ssm/xlstm/hybrid) ride this
+  layout too: their per-slot state rows (SSM states, mLSTM/sLSTM
+  triples, conv buffers — no sequence axis) scatter through the same
+  ``cache_insert``, with ``prefill`` threading per-row true lengths so
+  right-padded buckets stay bit-exact;
 * **paged** — one ``(num_blocks, block_size, H_kv, D)`` page pool per
   layer plus per-slot block tables (``paged_cache_init`` /
   ``decode_step_paged`` / ``prefill_paged_suffix``), the
@@ -71,10 +74,27 @@ def _kv_zeros(n: int, batch: int, max_len: int, cfg: ArchConfig,
     return {"k": z(), "v": z()}
 
 
+def _constrain_state(tree):
+    """Recurrent state pools follow the slot axis onto the mesh.
+
+    Every stacked recurrent leaf — ``(n_layers, batch, ...)`` SSM
+    states, mLSTM (C, n, m), sLSTM scalars, conv buffers — has the slot
+    ("batch") axis at position 1; the ``recurrent_state -> data`` rule
+    (``parallel/sharding.py``) shards it like the KV slot pool. No-op
+    without active rules.
+    """
+    return jax.tree.map(
+        lambda a: constrain(
+            a, *([None, "recurrent_state"] + [None] * (a.ndim - 2))
+        ),
+        tree,
+    )
+
+
 def _stack_cache(init_one, n: int):
     if n == 0:
         return None
-    return jax.vmap(lambda _: init_one())(jnp.arange(n))
+    return _constrain_state(jax.vmap(lambda _: init_one())(jnp.arange(n)))
 
 
 def init_cache(
@@ -145,8 +165,10 @@ def cache_insert(dst: Dict, src: Dict, row, slot, length) -> Dict:
 
     ``src`` is the cache returned by :func:`prefill` over a (bucketed)
     prompt batch; ``dst`` is a :func:`cache_init` pool mid-decode. Every
-    stacked cache leaf has the batch axis at position 1, so one generic
-    dynamic-update-slice per leaf moves the new request's state in; the
+    stacked cache leaf — KV stripes AND recurrent leaves (SSM
+    ``state``/``conv``, mLSTM ``C``/``n``/``m``, sLSTM scalars) — has
+    the batch axis at position 1, so one generic dynamic-update-slice
+    per leaf moves the new request's state in; the
     prompt axis of ``src`` may be shorter than the pool's ``max_len``
     (only the prefilled prefix is copied). ``length`` is the request's
     TRUE prompt length — positions beyond it in ``src`` are right-pad
@@ -168,6 +190,26 @@ def cache_insert(dst: Dict, src: Dict, row, slot, length) -> Dict:
     }
     out["length"] = dst["length"].at[slot].set(
         jnp.asarray(length, dst["length"].dtype))
+    return out
+
+
+def hoist_decode_params(params: Params, cfg: ArchConfig) -> Params:
+    """Fold per-token-invariant decode constants into served params.
+
+    Mamba2 layers gain ``A = -exp(A_log)`` (``ssm.decode_constants``) so
+    :func:`decode_step` stops re-deriving it from weights on every token
+    step; other families pass through unchanged. Outputs are
+    bit-identical — the same elementwise expression, evaluated once at
+    load instead of per step (the serve engine applies this at
+    construction; verified by an HLO op-count test).
+    """
+    if cfg.family != "hybrid":
+        return params
+    out = dict(params)
+    for key in ("mamba_groups", "mamba_tail"):
+        blk = params.get(key)
+        if blk is not None:
+            out[key] = {**blk, "mamba": ssm_mod.decode_constants(blk["mamba"])}
     return out
 
 
@@ -692,9 +734,22 @@ def prefill(
     params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
     max_len: int, dtype=jnp.bfloat16,
 ) -> Tuple[jax.Array, Dict]:
-    """Parallel prompt pass that returns (prompt logits, filled cache)."""
+    """Parallel prompt pass that returns (prompt logits, filled cache).
+
+    ``batch["lengths"]`` (optional, (B,) int32) marks each row's TRUE
+    prompt length in a RIGHT-padded batch. Attention K/V need no help
+    (the causal mask keeps right-pad junk out of true positions; junk
+    K/V rows stay masked by per-slot lengths at decode), but recurrent
+    state folds every token it sees — with ``lengths`` the SSM/xLSTM
+    scans make padded positions exact state no-ops and return each row's
+    final state *at its true length* (see ``apply_mamba2`` /
+    ``apply_mlstm`` / ``apply_slstm``), which is what lets bucketed
+    continuous-batching prefill admit recurrent families bit-exactly.
+    When given, ``cache["length"]`` is the per-row vector.
+    """
     q = cfg.quant
     tokens = batch["tokens"]
+    lengths = batch.get("lengths")
     b = tokens.shape[0]
     x = L.apply_embedding(params["embed"], tokens)
     if cfg.family == "vlm" and "patch_embeds" in batch:
@@ -758,7 +813,7 @@ def prefill(
         def mamba_one(x_, lp):
             h, _, st = ssm_mod.apply_mamba2(
                 lp["mamba"], L.apply_norm(cfg.norm_type, lp["norm1"], x_),
-                scfg, q, return_cache=True,
+                scfg, q, return_cache=True, lengths=lengths,
             )
             return x_ + h, st
 
@@ -773,13 +828,13 @@ def prefill(
                 return x_, (st, kv)
 
             x, (ssm_states, (ks, vs)) = jax.lax.scan(superstep, x, grouped_p)
-            cache["ssm_groups"] = jax.tree.map(
+            cache["ssm_groups"] = _constrain_state(jax.tree.map(
                 lambda a: a.reshape(g * pg, *a.shape[2:]), ssm_states
-            )
+            ))
             cache["kv_shared"] = write_kv(cache["kv_shared"], ks, vs)
         if tail:
             x, tail_states = jax.lax.scan(mamba_one, x, params["mamba_tail"])
-            cache["ssm_tail"] = tail_states
+            cache["ssm_tail"] = _constrain_state(tail_states)
     elif cfg.family == "ssm":
         g, pg, tail = plan["groups"], plan["per_group"], plan["tail"]
         xcfg = xlstm_config(cfg)
@@ -787,7 +842,7 @@ def prefill(
         def ml_one(x_, lp):
             h, _, st = xlstm_mod.apply_mlstm(
                 lp["mlstm"], L.apply_norm(cfg.norm_type, lp["norm1"], x_),
-                xcfg, q, return_cache=True,
+                xcfg, q, return_cache=True, lengths=lengths,
             )
             return x_ + h, st
 
@@ -801,24 +856,27 @@ def prefill(
                 x_, ml_st = jax.lax.scan(ml_one, x_, gp)
                 h, _, s_st = xlstm_mod.apply_slstm(
                     sp["slstm"], L.apply_norm(cfg.norm_type, sp["norm1"], x_),
-                    xcfg, q, return_cache=True,
+                    xcfg, q, return_cache=True, lengths=lengths,
                 )
                 return x_ + h, (ml_st, s_st)
 
             x, (ml_states, s_states) = jax.lax.scan(
                 superstep, x, (grouped_p, params["slstm_blocks"])
             )
-            cache["mlstm_groups"] = jax.tree.map(
+            cache["mlstm_groups"] = _constrain_state(jax.tree.map(
                 lambda a: a.reshape(g * pg, *a.shape[2:]), ml_states
-            )
-            cache["slstm"] = s_states
+            ))
+            cache["slstm"] = _constrain_state(s_states)
         if tail:
             x, tail_states = jax.lax.scan(ml_one, x, params["mlstm_tail"])
-            cache["mlstm_tail"] = tail_states
+            cache["mlstm_tail"] = _constrain_state(tail_states)
 
     x = L.apply_norm(cfg.norm_type, params["final_norm"], x)
     if cfg.family == "vlm" and "patch_embeds" in batch:
         x = x[:, batch["patch_embeds"].shape[1]:]
     logits = L.apply_lm_head(params["embed"], x, params.get("lm_head"))
-    cache["length"] = jnp.asarray(s, jnp.int32)
+    if lengths is not None:
+        cache["length"] = jnp.asarray(lengths, jnp.int32)
+    else:
+        cache["length"] = jnp.asarray(s, jnp.int32)
     return logits, cache

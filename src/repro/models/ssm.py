@@ -11,7 +11,7 @@ family too (DESIGN.md §Arch-applicability).
 from __future__ import annotations
 
 import math
-from typing import Dict, NamedTuple, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -80,6 +80,45 @@ def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Arra
     return out + b
 
 
+def conv_tail_window(stream: jax.Array, w: int,
+                     lengths: Optional[jax.Array] = None) -> jax.Array:
+    """Last-``w`` window of a ``(B, S, C)`` conv input stream, per row.
+
+    With ``lengths=None`` this is the trailing window ``[S-w, S)``
+    (zero-filled when ``S < w``) — the conv state a decode continuation
+    needs after an unpadded prefill. With per-row ``lengths`` (B,), row
+    ``b`` gets the window ``[lengths[b]-w, lengths[b])`` instead, so a
+    RIGHT-padded prefill still hands decode the conv buffer of the last
+    *true* tokens; positions before 0 read as zeros, matching a fresh
+    conv cache.
+    """
+    b, s, c = stream.shape
+    if lengths is None:
+        return jnp.pad(stream, ((0, 0), (max(w - s, 0), 0), (0, 0)))[:, -w:]
+    xp = jnp.pad(stream, ((0, 0), (w, 0), (0, 0)))
+    return jax.vmap(
+        lambda row, l: jax.lax.dynamic_slice(row, (l, 0), (w, c))
+    )(xp, lengths)
+
+
+def decode_constants(p: Params) -> Params:
+    """Fold per-step-invariant decode terms into the param dict.
+
+    ``A = -exp(A_log)`` is recomputed by every :func:`decode_mamba2`
+    call (once per token step, per layer) even though it only depends on
+    weights. Serving hoists it once at pack/load time; :func:`decode_mamba2`
+    and :func:`apply_mamba2` pick up the precomputed leaf when present
+    (bit-identical — the same elementwise expression, evaluated earlier).
+    The softplus'd ``dt`` is NOT hoistable: ``dt_bias`` enters inside
+    ``softplus(dtr + dt_bias)`` with the per-token projection.
+    """
+    return {**p, "A": -jnp.exp(p["A_log"])}
+
+
+def _neg_A(p: Params) -> jax.Array:
+    return p["A"] if "A" in p else -jnp.exp(p["A_log"])
+
+
 def _ssd_chunked(
     xh: jax.Array,    # (B, S, H, P) inputs per head
     dt: jax.Array,    # (B, S, H)   softplus'd step sizes
@@ -136,7 +175,17 @@ def _ssd_chunked(
 def apply_mamba2(
     p: Params, x: jax.Array, cfg: SSMConfig, quant: QuantConfig,
     chunk: int = 128, return_cache: bool = False,
+    lengths: Optional[jax.Array] = None,
 ):
+    """Parallel (chunked-SSD) forward. x: (B, S, d).
+
+    ``lengths`` (B,) marks each row's TRUE token count in a RIGHT-padded
+    batch: positions ``t >= lengths[b]`` become state no-ops (``dt = 0``
+    — identity decay, zero injection) and the returned conv cache is the
+    per-row window ending at the true length, so the final state equals
+    an unpadded forward's bit for bit. Outputs at padded positions are
+    unmasked junk; callers read logits at true positions only.
+    """
     b, s, _ = x.shape
     zxd, stats = apply_linear(p["in_proj"], x, quant)
     z, xbc_raw, dtr = _split_proj(zxd, cfg)
@@ -146,7 +195,10 @@ def apply_mamba2(
     xh = xin.reshape(b, s, cfg.n_heads, cfg.head_dim)
     xh = constrain(xh, "batch", "seq", "ssm_inner", None)
     dt = jax.nn.softplus(dtr + p["dt_bias"])                # (B,S,H)
-    A = -jnp.exp(p["A_log"])                                # (H,) < 0
+    if lengths is not None:
+        valid = jnp.arange(s)[None, :] < lengths[:, None]   # (B,S)
+        dt = jnp.where(valid[..., None], dt, 0.0)
+    A = _neg_A(p)                                           # (H,) < 0
     y, hfinal = _ssd_chunked(xh, dt, A, Bm, Cm, chunk=chunk)
     y = y + xh * p["D"][None, None, :, None]
     y = y.reshape(b, s, cfg.d_inner)
@@ -154,8 +206,7 @@ def apply_mamba2(
     out, st2 = apply_linear(p["out_proj"], y, quant)
     stats.update(st2)
     if return_cache:
-        w = cfg.conv_width - 1
-        tail = jnp.pad(xbc_raw, ((0, 0), (max(w - s, 0), 0), (0, 0)))[:, -w:]
+        tail = conv_tail_window(xbc_raw, cfg.conv_width - 1, lengths)
         return out, stats, {"state": hfinal, "conv": tail}
     return out, stats
 
@@ -213,7 +264,7 @@ def decode_mamba2(
     xin, Bm, Cm = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + cfg.d_state], -1)
     xh = xin.reshape(b, cfg.n_heads, cfg.head_dim)
     dt = jax.nn.softplus(dtr + p["dt_bias"])                # (B,H)
-    A = -jnp.exp(p["A_log"])
+    A = _neg_A(p)                  # hoisted at serve time: decode_constants
     a = jnp.exp(dt * A)
     inc = jnp.einsum("bn,bh,bhp->bhnp", Bm, dt, xh)
     state = cache["state"] * a[:, :, None, None] + inc

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.core.config import QuantConfig
 from repro.core.psq_linear import apply_linear, init_linear
+from repro.models import ssm as ssm_mod
 from repro.models.layers import apply_rmsnorm, init_rmsnorm
 from repro.parallel.sharding import constrain
 
@@ -100,12 +101,19 @@ def _mlstm_parallel(q, k, v, i_pre, f_pre):
     return y
 
 
-def _mlstm_chunked(q, k, v, i_pre, f_pre, chunk: int = 128):
+def _mlstm_chunked(q, k, v, i_pre, f_pre, chunk: int = 128,
+                   lengths: Optional[jax.Array] = None):
     """Chunk-scanned stabilized mLSTM == the parallel form (tested).
 
     Only an (B, L, L, H) intra-chunk tensor is live at a time, so the
     train_4k cell stays compilable; the carried (C, n, m) state is the
     same triple the decode recurrence uses.
+
+    Positions at or beyond a row's limit — chunk padding, and everything
+    past ``lengths[b]`` when per-row ``lengths`` are given (RIGHT-padded
+    batches) — are exact state no-ops: the forget contribution is forced
+    to ``log f = 0`` (keep) and the input gate to ``-1e30`` (no write),
+    so the carry after the last true token matches an unpadded forward.
     """
     b, s, h, d = q.shape
     L = min(chunk, s)
@@ -114,19 +122,26 @@ def _mlstm_chunked(q, k, v, i_pre, f_pre, chunk: int = 128):
     if pad:
         q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (q, k, v))
         i_pre = jnp.pad(i_pre, ((0, 0), (0, pad), (0, 0)))
-        # padded steps must not erase state: forget-gate pre-act -> +inf
-        f_pre = jnp.pad(f_pre, ((0, 0), (0, pad), (0, 0)),
-                        constant_values=30.0)
+        f_pre = jnp.pad(f_pre, ((0, 0), (0, pad), (0, 0)))
+    limit = s if lengths is None else lengths[:, None]
+    valid = jnp.broadcast_to(
+        jnp.arange(nc * L)[None, :] < limit, (b, nc * L)
+    )
     split = lambda t: jnp.moveaxis(
         t.reshape(b, nc, L, *t.shape[2:]), 1, 0
     )
     qc, kc, vc, ic, fc = map(split, (q, k, v, i_pre, f_pre))
+    vdc = split(valid)
     tri = jnp.tril(jnp.ones((L, L), bool))
 
     def step(carry, inp):
         C, n, m = carry                                  # (B,H,D,D),(B,H,D),(B,H)
-        qt, kt, vt, it, ft = inp                         # (B,L,...)
-        logf = jax.nn.log_sigmoid(ft)                    # (B,L,H)
+        qt, kt, vt, it, ft, vd = inp                     # (B,L,...)
+        # masked steps keep state exactly: log f = 0, input gate = -inf
+        it = jnp.where(vd[..., None], it, -1e30)
+        logf = jnp.where(
+            vd[..., None], jax.nn.log_sigmoid(ft), 0.0
+        )                                                # (B,L,H)
         bcum = jnp.cumsum(logf, axis=1)
         # intra-chunk log weights
         dmat = bcum[:, :, None, :] - bcum[:, None, :, :] + it[:, None, :, :]
@@ -162,7 +177,7 @@ def _mlstm_chunked(q, k, v, i_pre, f_pre, chunk: int = 128):
     C0 = jnp.zeros((b, h, d, d), q.dtype)
     n0 = jnp.zeros((b, h, d), q.dtype)
     m0 = jnp.full((b, h), -1e9, q.dtype)
-    carry, ys = jax.lax.scan(step, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    carry, ys = jax.lax.scan(step, (C0, n0, m0), (qc, kc, vc, ic, fc, vdc))
     y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * L, h, d)
     return y[:, :s], carry
 
@@ -170,7 +185,17 @@ def _mlstm_chunked(q, k, v, i_pre, f_pre, chunk: int = 128):
 def apply_mlstm(
     p: Params, x: jax.Array, cfg: XLSTMConfig, quant: QuantConfig,
     chunk: int = 128, return_cache: bool = False,
+    lengths: Optional[jax.Array] = None,
 ):
+    """Parallel (chunked) forward. x: (B, S, d).
+
+    Per-row ``lengths`` (B,) mark each row's TRUE token count in a
+    RIGHT-padded batch: padded positions are exact state no-ops inside
+    :func:`_mlstm_chunked` and the returned conv cache is the per-row
+    window ending at the true length — the final (C, n, m, conv) state
+    matches an unpadded forward bit for bit (padded outputs are junk;
+    callers read true positions only).
+    """
     b, s, _ = x.shape
     up, stats = apply_linear(p["up_proj"], x, quant)
     xm, z = jnp.split(up, 2, axis=-1)
@@ -181,15 +206,15 @@ def apply_mlstm(
     v = _head_proj(xm.reshape(hshape), p["wv"])
     gates, _ = apply_linear(p["w_if"], xc, quant)
     i_pre, f_pre = jnp.split(gates, 2, axis=-1)         # (B,S,H)
-    y, (C, n, m) = _mlstm_chunked(q, k, v, i_pre, f_pre, chunk=chunk)
+    y, (C, n, m) = _mlstm_chunked(q, k, v, i_pre, f_pre, chunk=chunk,
+                                  lengths=lengths)
     y = y.reshape(b, s, cfg.d_inner)
     y = apply_rmsnorm(p["out_norm"], y) * jax.nn.silu(z)
     y = constrain(y, "batch", "seq", "ssm_inner")
     out, st = apply_linear(p["down_proj"], y, quant)
     stats.update(st)
     if return_cache:
-        w = cfg.conv_width - 1
-        tail = jnp.pad(xm, ((0, 0), (max(w - s, 0), 0), (0, 0)))[:, -w:]
+        tail = ssm_mod.conv_tail_window(xm, cfg.conv_width - 1, lengths)
         return out, stats, {"C": C, "n": n, "m": m, "conv": tail}
     return out, stats
 
@@ -262,18 +287,26 @@ def init_slstm(key: jax.Array, cfg: XLSTMConfig, quant: QuantConfig) -> Params:
 
 def apply_slstm(
     p: Params, x: jax.Array, cfg: XLSTMConfig, quant: QuantConfig,
-    return_cache: bool = False,
+    return_cache: bool = False, lengths: Optional[jax.Array] = None,
 ):
-    """Sequential sLSTM over time (lax.scan)."""
+    """Sequential sLSTM over time (lax.scan).
+
+    Per-row ``lengths`` (B,) mark each row's TRUE token count in a
+    RIGHT-padded batch: at padded steps the carried (c, n, m, h) state
+    is held unchanged (per-row select), so the final cache matches an
+    unpadded forward bit for bit.
+    """
     b, s, d = x.shape
     h = cfg.n_heads
     hd = d // h
     zin, stats = apply_linear(p["w_in"], x, quant)
     zin = zin.reshape(b, s, 4, d) + p["bias"]
+    limit = s if lengths is None else lengths[:, None]
+    valid = jnp.broadcast_to(jnp.arange(s)[None, :] < limit, (b, s))
 
     def step(carry, inp):
         c, n, m, hprev = carry                          # (B,d)/(B,d)/(B,h)/(B,d)
-        pre = inp                                       # (B,4,d)
+        pre, vd = inp                                   # (B,4,d), (B,)
         hh = hprev.reshape(b, h, hd)
         rec = jnp.einsum("ghij,bhj->gbhi", p["r"], hh).reshape(4, b, d)
         zt = jnp.tanh(pre[:, 0] + rec[0])
@@ -287,13 +320,19 @@ def apply_slstm(
         ch = c.reshape(b, h, hd) * fw + iw * zt.reshape(b, h, hd)
         nh = n.reshape(b, h, hd) * fw + iw
         hnew = ot * (ch / jnp.maximum(jnp.abs(nh), 1.0)).reshape(b, d)
-        return (ch.reshape(b, d), nh.reshape(b, d), m_new, hnew), hnew
+        new = (ch.reshape(b, d), nh.reshape(b, d), m_new, hnew)
+        # padded steps hold the carry (state no-op per row)
+        keep = lambda nw, old: jnp.where(vd[:, None], nw, old)
+        new = tuple(map(keep, new, (c, n, m, hprev)))
+        return new, new[3]
 
     init = (
         jnp.zeros((b, d)), jnp.zeros((b, d)),
         jnp.full((b, h), -1e9), jnp.zeros((b, d)),
     )
-    carry, ys = jax.lax.scan(step, init, jnp.moveaxis(zin, 1, 0))
+    carry, ys = jax.lax.scan(
+        step, init, (jnp.moveaxis(zin, 1, 0), jnp.moveaxis(valid, 1, 0))
+    )
     y = jnp.moveaxis(ys, 0, 1)
     out = apply_rmsnorm(p["out_norm"], y)
     if return_cache:

@@ -61,6 +61,9 @@ RULES_2D: Dict[str, MeshAxes] = {
     "kv_seq": None,        # decode KV cache sequence dim
     "long_kv_seq": "data",  # 500k-context decode: cache sharded over data
     "kv_blocks": "data",   # paged KV page pool: pages spread over data
+    # per-slot recurrent state pools (SSM/xLSTM/hybrid: ssm states, mLSTM
+    # C/n/m, sLSTM scalars, conv buffers) — slot axis shards like KV slots
+    "recurrent_state": "data",
     "sf_out": "model",     # PSQ scale-factor column dim (follows weight out)
     "ktiles": None,
 }

@@ -3,26 +3,34 @@
 Small-scale-runnable (CPU) but structured like a real engine. Two
 scheduling modes share one API:
 
-``continuous`` (default for KV-cache families)
+``continuous`` (default for KV-cache AND recurrent-state families)
   * a fixed pool of ``max_batch`` decode slots runs one ``decode_step``
     per iteration over the WHOLE pool — per-slot lengths in the stacked
-    KV cache (``models.decode.cache_init``) keep every slot at its own
+    cache (``models.decode.cache_init``) keep every slot at its own
     position,
   * finished sequences (EOS or max tokens) retire at every decode step,
     freeing their slot immediately,
   * queued requests are admitted into free slots at decode-step
     boundaries: prompts are right-padded to a power-of-two length bucket,
     prefilled as a batch, and each row's prefilled cache is scattered
-    into its slot (``models.decode.cache_insert``),
+    into its slot (``models.decode.cache_insert``). Attention K/V is
+    exact under right-padding by the causal mask; recurrent state
+    (SSM/xLSTM/hybrid) is exact because prefill threads per-row true
+    lengths into the state scans — pad positions are state no-ops and
+    each row's final state/conv buffer is taken at its true length,
   * all shapes are fixed after warm-up — the decode step compiles once,
     prefill/insert compile once per (bucket length, bucket batch) pair,
     and nothing recompiles afterwards (asserted by the tier-1 suite).
 
-``static`` (fallback for recurrent-state and side-input families)
-  * the classic drain-the-queue loop: batches of equal padded prompt
-    length prefill together and decode in lockstep until every member
-    finishes. Exact for SSM/xLSTM/hybrid states (whose prefill cannot
-    skip pad tokens) and for encdec/VLM side inputs.
+``static`` (fallback for side-input families, available everywhere)
+  * the classic drain-the-queue loop: one batch prefills together
+    (batch dim pow2-bucketed so compiles stay enumerable) and decodes
+    in lockstep until every member finishes. Attention families
+    left-pad to the longest prompt; recurrent families right-pad with
+    per-row lengths (masked prefill), so their mixed-length static
+    batches are bit-exact with sequential and continuous decoding.
+    Required for per-request side inputs (encdec ``enc_embeds``, VLM
+    ``patch_embeds``), which are batch-positional.
 
 The continuous scheduler supports two KV layouts
 (``EngineConfig.paged``): the default contiguous per-slot stripe, and
@@ -68,11 +76,20 @@ from repro.serve.paged_kv import PagedKVManager
 
 PyTree = Any
 
-# families whose decode state is a pure KV cache: prefill over a
-# right-padded prompt is exact (causal mask), so slots can be admitted
-# mid-flight. Recurrent families (ssm/hybrid) fold pad tokens into their
-# state; encdec needs per-request encoder output — those serve static.
-_CONTINUOUS_FAMILIES = ("dense", "moe", "vlm")
+# families the continuous scheduler admits mid-flight. KV-cache families
+# are exact under right-padded prefill (causal mask); recurrent-state
+# families (ssm/xlstm/hybrid) are exact because masked prefill makes pad
+# positions state no-ops and returns each row's final state at its TRUE
+# length (models/decode.prefill + per-layer `lengths` masking). Only
+# side-input families (encdec enc_embeds, VLM patch_embeds) still serve
+# static: their per-request inputs are batch-positional.
+_CONTINUOUS_FAMILIES = ("dense", "moe", "vlm", "hybrid", "ssm")
+
+# families whose decode state is carried recurrently (no KV sequence
+# axis): slot admission scatters state rows instead of KV stripes, and
+# the static fallback right-pads + tracks per-row lengths so recurrent
+# prefill stays exact under mixed prompt lengths
+_RECURRENT_FAMILIES = ("hybrid", "ssm")
 
 
 @dataclasses.dataclass
@@ -124,6 +141,10 @@ class ServeEngine:
     def __init__(self, params: PyTree, cfg: ArchConfig, ecfg: EngineConfig,
                  extra_inputs: Optional[Dict[str, np.ndarray]] = None,
                  mesh: Optional[Mesh] = None, rules=None):
+        if params is not None:
+            # per-token-invariant decode constants (e.g. Mamba2's
+            # A = -exp(A_log)) fold into the served tree once at load
+            params = D.hoist_decode_params(params, cfg)
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
@@ -156,11 +177,22 @@ class ServeEngine:
         self._mgr = None
         self._kv_cache = None
         if ecfg.paged:
+            if cfg.family not in D._PAGED_FAMILIES:
+                reason = (
+                    "recurrent state has no sequence axis to page — serve "
+                    "it through the contiguous continuous scheduler "
+                    "(paged=False)"
+                    if cfg.family in _RECURRENT_FAMILIES else
+                    "per-request side inputs force the static scheduler"
+                )
+                raise ValueError(
+                    f"paged KV cache supports attention-KV families "
+                    f"{D._PAGED_FAMILIES}, got {cfg.family!r}: {reason}"
+                )
             if self.mode != "continuous":
                 raise ValueError(
-                    f"paged KV cache requires the continuous scheduler "
-                    f"(KV-cache families {_CONTINUOUS_FAMILIES}); resolved "
-                    f"mode is {self.mode!r}"
+                    f"paged KV cache requires the continuous scheduler; "
+                    f"resolved mode is {self.mode!r}"
                 )
             if ecfg.max_len % ecfg.block_size:
                 raise ValueError(
@@ -221,11 +253,15 @@ class ServeEngine:
                 return D.prefill(p, cfg, b, ecfg.max_len, dtype=jnp.float32)
 
         # continuous path: prefill only covers the prompt bucket — the
-        # rows are scattered into the long-lived slot cache afterwards
-        def _prefill_bucket(p, toks):
+        # rows are scattered into the long-lived slot cache afterwards.
+        # Per-row true lengths ride along so recurrent-state families
+        # return exact final states under right-padding (attention
+        # families need only the causal mask and ignore them).
+        def _prefill_bucket(p, toks, lens):
             with self._ctx():
                 return D.prefill(
-                    p, cfg, {"tokens": toks}, toks.shape[1], dtype=jnp.float32
+                    p, cfg, {"tokens": toks, "lengths": lens},
+                    toks.shape[1], dtype=jnp.float32
                 )
 
         # donate the cache: in-place dynamic-update-slice instead of a
@@ -265,10 +301,9 @@ class ServeEngine:
         if mode == "continuous":
             if self.cfg.family not in _CONTINUOUS_FAMILIES:
                 raise ValueError(
-                    f"continuous batching needs a KV-cache family "
-                    f"{_CONTINUOUS_FAMILIES}, got {self.cfg.family!r} "
-                    f"(recurrent prefill cannot skip pad tokens); "
-                    f"use mode='static'"
+                    f"continuous batching supports {_CONTINUOUS_FAMILIES}, "
+                    f"got {self.cfg.family!r} (per-request side inputs are "
+                    f"batch-positional); use mode='static'"
                 )
             if self.extra:
                 raise ValueError(
@@ -355,6 +390,19 @@ class ServeEngine:
         r.done, r.t_done = True, now
         self.finished.append(r)
 
+    @staticmethod
+    def _right_pad(reqs: List[Request], rows: int, width: int):
+        """RIGHT-padded token block + true-length vector for a prefill
+        batch: the causal mask keeps pad columns out of attention, the
+        lengths keep them out of recurrent state (models/decode.prefill).
+        Rows beyond ``len(reqs)`` are batch-bucket padding (length 0)."""
+        toks = np.zeros((rows, width), np.int32)
+        lens = np.zeros((rows,), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, : len(r.prompt)] = r.prompt
+            lens[i] = len(r.prompt)
+        return toks, lens
+
     def _admit(self, cache, slots: List[Optional[Request]],
                last_tok: np.ndarray, free: List[int]):
         """Fill free slots from the queue with one bucketed prefill call.
@@ -379,10 +427,9 @@ class ServeEngine:
 
         m = len(take)
         mp = min(_next_pow2(m), self.ecfg.prefill_batch)
-        toks = np.zeros((mp, w), np.int32)
-        for i, r in enumerate(take):
-            toks[i, : len(r.prompt)] = r.prompt      # RIGHT-padded: causal
-        logits, pcache = self._prefill_bucket(self.params, jnp.asarray(toks))
+        toks, lens = self._right_pad(take, mp, w)
+        logits, pcache = self._prefill_bucket(
+            self.params, jnp.asarray(toks), jnp.asarray(lens))
         self.prefill_calls += 1
         self.prefill_tokens += sum(len(r.prompt) for r in take)
         # each row's next token comes from its true last prompt position
@@ -490,9 +537,7 @@ class ServeEngine:
 
         m = len(take)
         mp = min(_next_pow2(m), self.ecfg.prefill_batch)
-        toks = np.zeros((mp, w), np.int32)
-        for i, r in enumerate(take):
-            toks[i, : len(r.prompt)] = r.prompt      # RIGHT-padded: causal
+        toks, lens = self._right_pad(take, mp, w)
         # claim pages first so nothing registers mid-batch: identical
         # prompts inside one cold batch each prefill privately (the
         # second one hits the index only on a LATER admission)
@@ -502,7 +547,8 @@ class ServeEngine:
             prompt = [int(t) for t in r.prompt]
             self._mgr.admit(slot, prompt)
             placed.append((i, r, slot, prompt))
-        logits, pcache = self._prefill_bucket(self.params, jnp.asarray(toks))
+        logits, pcache = self._prefill_bucket(
+            self.params, jnp.asarray(toks), jnp.asarray(lens))
         self.prefill_calls += 1
         self.prefill_tokens += sum(len(r.prompt) for r in take)
         idx = jnp.asarray([len(r.prompt) - 1 for r in take] + [0] * (mp - m))
@@ -590,37 +636,90 @@ class ServeEngine:
             out[i, s - len(r.prompt):] = r.prompt
         return out
 
-    def _run_batch(self, reqs: List[Request]):
-        tokens = self._pad_prompts(reqs)
-        b = {"tokens": jnp.asarray(tokens)}
-        if self.cfg.family == "encdec":
-            b["enc_embeds"] = jnp.asarray(
-                self.extra.get(
-                    "enc_embeds",
-                    np.zeros((len(reqs), tokens.shape[1], self.cfg.d_model),
-                             np.float32),
+    def _extra_rows(self, key: str, reqs: List[Request], bp: int,
+                    default_shape) -> np.ndarray:
+        """Per-request side-input rows for a static batch.
+
+        Side inputs are positional by submission order (request uid 1 is
+        row 0, ...). Slicing the head of the array — the old behavior —
+        handed EVERY batch the first batch's rows; gathering per request
+        keeps later batches on their own inputs. Batch-bucket padding
+        rows are zeros (their outputs are ignored).
+        """
+        arr = self.extra.get(key)
+        if arr is None:
+            arr = np.zeros((0,) + tuple(default_shape), np.float32)
+        arr = np.asarray(arr)
+        out = np.zeros((bp,) + arr.shape[1:], arr.dtype)
+        for i, r in enumerate(reqs):
+            if arr.shape[0] == 0:
+                continue                     # no side inputs: zeros rows
+            if r.uid - 1 >= arr.shape[0]:
+                raise ValueError(
+                    f"request uid {r.uid} has no {key} row: "
+                    f"{arr.shape[0]} rows were supplied at engine "
+                    f"construction (side inputs are positional by "
+                    f"submission order)"
                 )
-            )[: len(reqs)]
+            out[i] = arr[r.uid - 1]
+        return out
+
+    def _run_batch(self, reqs: List[Request]):
+        nreq = len(reqs)
+        # pow2-bucket the batch dim: _prefill_full compiles once per
+        # (batch bucket, padded length) pair instead of once per exact
+        # admitted batch size (batch rows are independent everywhere in
+        # the model, so padding rows are inert)
+        bp = min(_next_pow2(nreq), self.ecfg.max_batch)
+        recurrent = self.cfg.family in _RECURRENT_FAMILIES
+        if recurrent:
+            # RIGHT-pad to a pow2 length bucket + per-row true lengths:
+            # masked recurrent prefill is exact under right-padding
+            # (models/decode.prefill) and decode advances each row at
+            # its own position (vector lengths) — mixed-length static
+            # batches decode bit-exactly with sequential and continuous
+            w = self._bucket(max(len(r.prompt) for r in reqs))
+            tokens, lens = self._right_pad(reqs, bp, w)
+            b = {"tokens": jnp.asarray(tokens), "lengths": jnp.asarray(lens)}
+        else:
+            # attention families keep the classic left-pad: the newest
+            # token sits at the last position for every row
+            tokens = self._pad_prompts(reqs)
+            if bp > nreq:
+                tokens = np.concatenate(
+                    [tokens, np.zeros((bp - nreq, tokens.shape[1]),
+                                      np.int32)]
+                )
+            b = {"tokens": jnp.asarray(tokens)}
+        if self.cfg.family == "encdec":
+            b["enc_embeds"] = jnp.asarray(self._extra_rows(
+                "enc_embeds", reqs, bp, (tokens.shape[1], self.cfg.d_model)))
         if self.cfg.family == "vlm" and "patch_embeds" in self.extra:
-            b["patch_embeds"] = jnp.asarray(self.extra["patch_embeds"])[: len(reqs)]
+            b["patch_embeds"] = jnp.asarray(
+                self._extra_rows("patch_embeds", reqs, bp, None))
         logits, cache = self._prefill_full(self.params, b)
         self.prefill_calls += 1
         self.prefill_tokens += sum(len(r.prompt) for r in reqs)
-        nxt = self._sample(logits[:, -1])
+        if recurrent:
+            # each row's first token comes from its true last position
+            nxt = self._sample(
+                logits[jnp.arange(bp), jnp.maximum(b["lengths"] - 1, 0)])
+        else:
+            nxt = self._sample(logits[:, -1])
         t_first = time.time()
         for r, t in zip(reqs, np.asarray(nxt)):
             r.output.append(int(t))
             r.t_first_token = t_first
-        # static batches left-pad to the LONGEST prompt (VLM: plus patch
-        # embeds), so a short prompt's decode budget can push KV writes
-        # past max_len even when every request individually fits
-        # (submit() checks per-request). Cap steps at remaining cache
-        # capacity: truncated output for the over-budget request, never a
-        # clamped write corrupting the cache. Pure-SSM state has no
-        # sequence axis to overflow.
+        # attention-family static batches pad to the LONGEST prompt
+        # (VLM: plus patch embeds), so a short prompt's decode budget can
+        # push KV writes past max_len even when every request
+        # individually fits (submit() checks per-request). Cap steps at
+        # remaining cache capacity: truncated output for the over-budget
+        # request, never a clamped write corrupting the cache. Pure
+        # recurrent state has no sequence axis to overflow.
         max_new = max(r.max_new_tokens for r in reqs)
         if self.cfg.family != "ssm":
-            capacity = self.ecfg.max_len - int(np.asarray(cache["length"]))
+            capacity = self.ecfg.max_len - int(np.max(np.asarray(cache["length"])))
             max_new = min(max_new, capacity + 1)
         for _ in range(max_new - 1):
             # occupancy relative to the slot pool a continuous scheduler

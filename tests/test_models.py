@@ -198,3 +198,77 @@ class TestEndToEndDecode:
             np.asarray(logits_full[:, S]), np.asarray(logits_dec[:, 0]),
             rtol=2e-2, atol=2e-2,
         )
+
+
+class TestMaskedLengthPrefill:
+    """Per-row `lengths` make right-pad positions exact state no-ops.
+
+    This is the contract that lets recurrent families ride the
+    continuous engine's bucketed (right-padded) prefill: the final
+    state/conv buffer of a padded row must equal the unpadded forward's,
+    bit for bit — including when the true length lands mid-chunk.
+    """
+
+    B, SEQ = 3, 11
+    LENS = (11, 5, 2)
+
+    def _lens(self):
+        return jnp.asarray(self.LENS, jnp.int32)
+
+    def test_mamba2_state_matches_unpadded(self):
+        cfg = ssm_mod.SSMConfig(d_model=32, d_state=8, head_dim=16)
+        p = ssm_mod.init_mamba2(KEY, cfg, DENSE)
+        x = jax.random.normal(jax.random.PRNGKey(1), (self.B, self.SEQ, 32))
+        _, _, st = ssm_mod.apply_mamba2(p, x, cfg, DENSE, chunk=4,
+                                        return_cache=True,
+                                        lengths=self._lens())
+        for b, l in enumerate(self.LENS):
+            _, _, ref = ssm_mod.apply_mamba2(p, x[b:b + 1, :l], cfg, DENSE,
+                                             chunk=4, return_cache=True)
+            for k in ("state", "conv"):
+                np.testing.assert_array_equal(
+                    np.asarray(st[k][b]), np.asarray(ref[k][0]),
+                    err_msg=f"mamba2 {k} row {b}")
+
+    def test_mlstm_state_matches_unpadded(self):
+        cfg = xlstm_mod.XLSTMConfig(d_model=16, n_heads=2)
+        p = xlstm_mod.init_mlstm(KEY, cfg, DENSE)
+        x = jax.random.normal(jax.random.PRNGKey(2), (self.B, self.SEQ, 16))
+        _, _, st = xlstm_mod.apply_mlstm(p, x, cfg, DENSE, chunk=4,
+                                         return_cache=True,
+                                         lengths=self._lens())
+        for b, l in enumerate(self.LENS):
+            _, _, ref = xlstm_mod.apply_mlstm(p, x[b:b + 1, :l], cfg, DENSE,
+                                              chunk=4, return_cache=True)
+            for k in ("C", "n", "m", "conv"):
+                np.testing.assert_array_equal(
+                    np.asarray(st[k][b]), np.asarray(ref[k][0]),
+                    err_msg=f"mlstm {k} row {b}")
+
+    def test_slstm_state_matches_unpadded(self):
+        cfg = xlstm_mod.XLSTMConfig(d_model=16, n_heads=2)
+        p = xlstm_mod.init_slstm(KEY, cfg, DENSE)
+        x = jax.random.normal(jax.random.PRNGKey(3), (self.B, self.SEQ, 16))
+        _, _, st = xlstm_mod.apply_slstm(p, x, cfg, DENSE, return_cache=True,
+                                         lengths=self._lens())
+        for b, l in enumerate(self.LENS):
+            _, _, ref = xlstm_mod.apply_slstm(p, x[b:b + 1, :l], cfg, DENSE,
+                                              return_cache=True)
+            for k in ("c", "n", "m", "h"):
+                np.testing.assert_array_equal(
+                    np.asarray(st[k][b]), np.asarray(ref[k][0]),
+                    err_msg=f"slstm {k} row {b}")
+
+    def test_zero_length_row_keeps_fresh_state(self):
+        """A bucket-padding row (length 0) must come out exactly as a
+        fresh cache — it may be scattered into a slot pool."""
+        cfg = xlstm_mod.XLSTMConfig(d_model=16, n_heads=2)
+        p = xlstm_mod.init_mlstm(KEY, cfg, DENSE)
+        x = jax.random.normal(jax.random.PRNGKey(4), (1, 6, 16))
+        _, _, st = xlstm_mod.apply_mlstm(p, x, cfg, DENSE, chunk=4,
+                                         return_cache=True,
+                                         lengths=jnp.asarray([0], jnp.int32))
+        fresh = xlstm_mod.init_mlstm_cache(1, cfg)
+        for k in ("C", "n", "m", "conv"):
+            np.testing.assert_array_equal(
+                np.asarray(st[k]), np.asarray(fresh[k]), err_msg=k)

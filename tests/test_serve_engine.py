@@ -153,6 +153,56 @@ class TestContinuousScheduling:
             eng.submit(np.arange(10), max_new_tokens=10)
 
 
+class TestStaticScheduling:
+    def test_static_prefill_buckets_the_batch_dim(self, tiny):
+        """_prefill_full pow2-buckets the admitted batch size: a trailing
+        batch of 3 pads to the 4-bucket and reuses the full-batch
+        compile, and a repeat workload adds zero compilations."""
+        cfg, params = tiny
+        eng = ServeEngine(params, cfg,
+                          EngineConfig(max_batch=4, max_len=64,
+                                       mode="static"))
+        if not hasattr(eng._prefill_full, "_cache_size"):
+            pytest.skip("jax version without jit _cache_size introspection")
+        rng = np.random.RandomState(0)
+        for _ in range(7):                      # batches of 4 then 3
+            eng.submit(rng.randint(0, cfg.vocab_size, size=6),
+                       max_new_tokens=3)
+        eng.run()
+        assert eng._prefill_full._cache_size() == 1, \
+            "batches of 4 and 3 must share one (batch-bucket, len) compile"
+        for _ in range(7):
+            eng.submit(rng.randint(0, cfg.vocab_size, size=6),
+                       max_new_tokens=3)
+        eng.run()
+        assert eng._prefill_full._cache_size() == 1
+
+    def test_encdec_batches_get_their_own_side_inputs(self):
+        """Side inputs are positional by submission order: request i must
+        be prefilled against its OWN enc_embeds row, not batch-local row
+        0 (the old head-slice handed every batch the first rows)."""
+        from repro.models import init_model as _init
+
+        cfg = get_config("whisper-large-v3").reduced()
+        params = _init(jax.random.PRNGKey(0), cfg)
+        rng = np.random.RandomState(0)
+        prompt = rng.randint(0, cfg.vocab_size, size=5)
+        enc = (rng.randn(2, 6, cfg.d_model) * 0.1).astype(np.float32)
+        eng = ServeEngine(params, cfg, EngineConfig(max_batch=1, max_len=32),
+                          extra_inputs={"enc_embeds": enc})
+        eng.submit(prompt, max_new_tokens=4)
+        eng.submit(prompt, max_new_tokens=4)    # second single-req batch
+        out = {r.uid: r.output for r in eng.run()}
+
+        ref_eng = ServeEngine(params, cfg,
+                              EngineConfig(max_batch=1, max_len=32),
+                              extra_inputs={"enc_embeds": enc[1:]})
+        ref_eng.submit(prompt, max_new_tokens=4)
+        ref = ref_eng.run()[0].output
+        assert out[2] == ref, \
+            "request 2 must decode against enc_embeds row 1, not row 0"
+
+
 class TestShardedServing:
     """Mesh-sharded engine == single-device engine, token for token."""
 
@@ -234,16 +284,81 @@ class TestShardedServing:
 
 
 class TestModeResolution:
-    def test_recurrent_families_fall_back_to_static(self):
-        for arch in ("xlstm-350m", "zamba2-7b", "whisper-large-v3"):
-            cfg = get_config(arch).reduced()
-            eng = ServeEngine(None, cfg, EngineConfig())
-            assert eng.mode == "static", arch
+    """mode="auto" across every family × (paged, mesh, prefix_reuse),
+    including the error paths (nothing may silently fall through)."""
 
-    def test_forcing_continuous_on_recurrent_family_raises(self):
+    # family -> expected auto resolution (no side inputs submitted)
+    AUTO = {
+        "tinyllama-1.1b": "continuous",        # dense
+        "granite-moe-3b-a800m": "continuous",  # moe
+        "llava-next-mistral-7b": "continuous",  # vlm without patch embeds
+        "xlstm-350m": "continuous",            # ssm: mLSTM/sLSTM state
+        "zamba2-7b": "continuous",             # hybrid: Mamba2 + attn
+        "whisper-large-v3": "static",          # encdec: per-request enc out
+    }
+
+    @pytest.mark.parametrize("arch,expect", sorted(AUTO.items()))
+    def test_auto_resolution_by_family(self, arch, expect):
+        cfg = get_config(arch).reduced()
+        eng = ServeEngine(None, cfg, EngineConfig())
+        assert eng.mode == expect, arch
+
+    @pytest.mark.parametrize("arch,expect", sorted(AUTO.items()))
+    @pytest.mark.parametrize("prefix_reuse", [False, True])
+    @pytest.mark.parametrize("with_mesh", [False, True])
+    def test_auto_matrix_paged_mesh_reuse(self, arch, expect, prefix_reuse,
+                                          with_mesh):
+        """paged/mesh/prefix_reuse flags never change what auto resolves
+        to; the invalid paged combinations raise their specific message
+        instead of falling through to a broken engine."""
+        mesh = None
+        if with_mesh:
+            if len(jax.devices()) < 2:
+                pytest.skip("needs >= 2 devices")
+            mesh = jax.make_mesh((2, 1), ("data", "model"))
+        cfg = get_config(arch).reduced()
+        eng = ServeEngine(None, cfg,
+                          EngineConfig(max_batch=2, max_len=32,
+                                       prefix_reuse=prefix_reuse),
+                          mesh=mesh)
+        assert eng.mode == expect, arch
+
+        paged_kw = dict(max_batch=2, max_len=32, paged=True, block_size=16,
+                        prefix_reuse=prefix_reuse)
+        if cfg.family in ("hybrid", "ssm", "encdec"):
+            # recurrent state has nothing to page; encdec is shut out of
+            # the continuous scheduler entirely — both must say why
+            with pytest.raises(ValueError, match="paged KV cache"):
+                ServeEngine(None, cfg, EngineConfig(**paged_kw), mesh=mesh)
+        else:
+            eng = ServeEngine(None, cfg, EngineConfig(**paged_kw), mesh=mesh)
+            assert eng.mode == "continuous"
+
+    def test_paged_on_recurrent_family_names_the_reason(self):
         cfg = get_config("xlstm-350m").reduced()
+        with pytest.raises(ValueError, match="no sequence axis to page"):
+            ServeEngine(None, cfg,
+                        EngineConfig(paged=True, max_len=32, block_size=16))
+
+    def test_paged_with_side_inputs_raises_scheduler_error(self):
+        # vlm IS a paged family, but patch embeds force static — the
+        # engine must reject the combination, not half-configure pages
+        cfg = get_config("llava-next-mistral-7b").reduced()
+        with pytest.raises(ValueError, match="continuous scheduler"):
+            ServeEngine(None, cfg,
+                        EngineConfig(paged=True, max_len=32, block_size=16),
+                        extra_inputs={"patch_embeds": np.zeros((1, 2, 4))})
+
+    def test_forcing_continuous_on_encdec_raises(self):
+        cfg = get_config("whisper-large-v3").reduced()
         with pytest.raises(ValueError, match="static"):
             ServeEngine(None, cfg, EngineConfig(mode="continuous"))
+
+    def test_forcing_continuous_with_side_inputs_raises(self):
+        cfg = get_config("llava-next-mistral-7b").reduced()
+        with pytest.raises(ValueError, match="side"):
+            ServeEngine(None, cfg, EngineConfig(mode="continuous"),
+                        extra_inputs={"patch_embeds": np.zeros((1, 2, 4))})
 
     def test_side_inputs_force_static(self):
         cfg = get_config("tinyllama-1.1b").reduced()
