@@ -17,6 +17,12 @@ on their own mixed-length traces: masked-length prefill makes the slot
 pool exact for recurrent state, so the delta is pure scheduling.
 ``--recurrent`` runs only this section.
 
+The ``device_loop`` section sweeps the on-device multi-step decode loop
+(``EngineConfig.decode_horizon`` 1 / 8 / 32) over the same mixed-length
+trace: one ``lax.while_loop`` jit call per horizon instead of one jit
+call per token, so ``host_syncs`` drops ~H-fold with bit-identical
+greedy outputs. ``--device-loop`` runs only this section.
+
 The ``paged_prefix`` section drives the PAGED engine with a
 shared-system-prompt trace (every request = one long shared prefix + a
 short unique tail — the chat-serving regime) with prefix reuse off vs
@@ -120,7 +126,9 @@ def bench_mode(mode: str, params, cfg, trace, slots: int,
         "tokens_per_s": stats["tokens_per_s"],
         "total_tokens": stats["total_tokens"],
         "mean_ttft_s": stats["mean_ttft_s"],
+        "mean_tpot_s": stats["mean_tpot_s"],
         "decode_steps": sched["decode_steps"],
+        "host_syncs": sched["host_syncs"],
         "prefill_calls": sched["prefill_calls"],
         "prefill_tokens": sched["prefill_tokens"],
         "cached_prefix_tokens": sched["cached_prefix_tokens"],
@@ -216,6 +224,39 @@ def bench_recurrent(args) -> Dict:
     return out
 
 
+def bench_device_loop(params, cfg, trace, slots: int, max_len: int) -> Dict:
+    """Horizon sweep for the on-device multi-step decode loop.
+
+    The same mixed-length trace runs the continuous greedy engine at
+    ``decode_horizon`` 1 / 8 / 32: one jit call per horizon instead of
+    per token, so ``host_syncs`` drops ~H-fold while ``decode_steps``
+    (and greedy outputs — pinned by tests/test_device_loop.py) stay
+    identical. Best-of-5 per horizon; the h=1 entry is the baseline the
+    speedups compare against.
+    """
+    out: Dict = {"horizons": {}}
+    base = None
+    for h in (1, 8, 32):
+        r = bench_mode("continuous", params, cfg, trace, slots, max_len,
+                       repeats=5, decode_horizon=h)
+        out["horizons"][str(h)] = r
+        if base is None:
+            base = r
+        print(f"[serve_bench] device_loop h={h:2d}: "
+              f"{r['tokens_per_s']:8.1f} tok/s  "
+              f"syncs {r['host_syncs']:4d}  steps {r['decode_steps']:4d}  "
+              f"tpot {r['mean_tpot_s'] * 1e3:6.2f} ms")
+    h32 = out["horizons"]["32"]
+    out["sync_reduction"] = 1.0 - h32["host_syncs"] / max(base["host_syncs"], 1)
+    out["speedup_tokens_per_s"] = (
+        h32["tokens_per_s"] / max(base["tokens_per_s"], 1e-9)
+    )
+    print(f"[serve_bench] device loop h=32 vs h=1: "
+          f"{out['sync_reduction'] * 100:.1f}% fewer host syncs, "
+          f"{out['speedup_tokens_per_s']:.2f}x tokens/s")
+    return out
+
+
 def run(args) -> Dict:
     cfg = get_config(args.arch).reduced()
     if not args.recurrent:
@@ -253,7 +294,8 @@ def run(args) -> Dict:
         "platform": jax.default_backend(),
         "devices": len(jax.devices()),
     }
-    if not args.paged and not args.recurrent:
+    only_section = args.paged or args.recurrent or args.device_loop
+    if not only_section:
         for mode in ("static", "continuous"):
             result[mode] = bench_mode(mode, params, cfg, trace, slots,
                                       max_len)
@@ -270,10 +312,18 @@ def run(args) -> Dict:
         print(f"[serve_bench] continuous/static speedup: "
               f"{result['speedup_tokens_per_s']:.2f}x")
 
+    # horizon sweep for the on-device decode loop: same trace, same
+    # greedy outputs, host syncs cut ~H-fold (docs/serving.md)
+    if not args.paged and not args.recurrent:
+        result["device_loop"] = dict(
+            requests=n_req, slots=slots, max_len=max_len,
+            **bench_device_loop(params, cfg, trace, slots, max_len),
+        )
+
     # shared-system-prompt trace on the paged engine: a prefill-heavy
     # regime (long shared prefix, short tails and decode budgets) where
     # radix prefix reuse pays directly in admission latency
-    if not args.recurrent:
+    if not args.recurrent and not args.device_loop:
         if args.smoke:
             pn, pfx, tails, pnew = 8, 24, (2, 6), (2, 4)
             pslots, pmax, pbs = 4, 64, 8
@@ -291,10 +341,10 @@ def run(args) -> Dict:
     # recurrent-state families (hybrid zamba2, xlstm) through the
     # continuous slot pool vs the static fallback — same mixed-length
     # trace per arch, bit-identical outputs, scheduling-only delta
-    if not args.paged:
+    if not args.paged and not args.device_loop:
         result["recurrent_continuous"] = bench_recurrent(args)
 
-    if not args.paged and not args.recurrent and args.devices > 1:
+    if not only_section and args.devices > 1:
         result["sharded"] = run_sharded_sweep(args)
     return result
 
@@ -361,6 +411,9 @@ def main() -> None:
     ap.add_argument("--recurrent", action="store_true",
                     help="run only the recurrent-family (zamba2/xlstm) "
                          "continuous-vs-static section")
+    ap.add_argument("--device-loop", action="store_true",
+                    help="run only the device-loop horizon sweep "
+                         "(decode_horizon 1/8/32)")
     ap.add_argument("--devices", type=int, default=0,
                     help="CPU virtual devices for the tensor-parallel mesh "
                          "sweep (must be the first JAX use in the process)")

@@ -3,7 +3,7 @@
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --requests 8 [--int4 | --psq-packed] [--backend reference] \
         [--slots 4] [--mode auto|continuous|static] \
-        [--mesh DATA,MODEL] [--devices N]
+        [--decode-horizon H] [--mesh DATA,MODEL] [--devices N]
 
 KV-cache AND recurrent-state families (SSM/xLSTM/hybrid) serve through
 the continuous-batching slot pool (per-step retirement + mid-flight
@@ -11,7 +11,9 @@ admission, see docs/serving.md); only side-input families (encdec/VLM
 with patch embeds) fall back to static batching. ``--paged`` switches
 the slot pool to the paged KV cache — fixed-size pages, block tables
 and shared-prefix radix reuse; attention-KV families only
-(docs/memory.md).
+(docs/memory.md). ``--decode-horizon H`` batches up to H greedy decode
+steps into one on-device ``lax.while_loop`` per host round-trip
+(bit-exact with H=1; greedy only — see docs/serving.md).
 
 Multi-device: ``--mesh 1,4`` runs the PSQ datapath tensor-parallel over
 a 4-way ``model`` axis (packed layers column-sharded, one psum per
@@ -52,6 +54,10 @@ def _parse_args():
                     choices=["auto", "continuous", "static"],
                     help="scheduler: continuous batching (KV families) "
                          "or the static drain-the-queue loop")
+    ap.add_argument("--decode-horizon", type=int, default=1,
+                    help="greedy decode steps per on-device while-loop "
+                         "round-trip (continuous scheduler; 1 = one "
+                         "host sync per token)")
     ap.add_argument("--paged", action="store_true",
                     help="paged KV cache: page pool + block tables + "
                          "shared-prefix radix reuse (continuous only; "
@@ -134,6 +140,7 @@ def main():
         params, cfg,
         EngineConfig(max_batch=args.slots, max_len=args.max_len,
                      temperature=args.temperature, mode=args.mode,
+                     decode_horizon=args.decode_horizon,
                      paged=args.paged, block_size=args.block_size,
                      prefix_reuse=not args.no_prefix_reuse),
         extra_inputs=extra,

@@ -27,6 +27,12 @@ Two KV layouts share the same decode math:
   ``decode_step_paged`` / ``prefill_paged_suffix``), the
   continuous-engine layout that enables shared-prefix reuse
   (``serve/paged_kv.py``, docs/memory.md).
+
+The serving engine does not call ``decode_step`` once per token: the
+greedy hot loop runs through ``decode_multi_step`` /
+``decode_multi_step_paged``, a device-side ``lax.while_loop`` that takes
+up to ``decode_horizon`` steps per host round-trip (on-device argmax,
+per-slot EOS/budget flags, retirement masks via ``step_mask``).
 """
 from __future__ import annotations
 
@@ -317,13 +323,15 @@ def _gather_pages(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
 
 
 def _commit_kv_paged(kv: Dict, upd: Dict, length: jax.Array,
-                     block_tables: jax.Array) -> Dict:
+                     block_tables: jax.Array, step_mask=None) -> Dict:
     """Write all layers' new-token K/V into each slot's current page.
 
     The paged analogue of :func:`_commit_kv`: position ``length[b]``
     maps through the block table; retired slots' tables point at the
     trash page (and their clamped page index lands there too), so the
-    fixed-shape scatter never corrupts live pages.
+    fixed-shape scatter never corrupts live pages. ``step_mask`` (B,)
+    bool writes masked-out slots' OLD page contents back (a no-op), so
+    a slot that finishes mid-horizon stops touching its pages.
     """
     bs = kv["k"].shape[2]
     b, mb = block_tables.shape
@@ -332,7 +340,11 @@ def _commit_kv_paged(kv: Dict, upd: Dict, length: jax.Array,
     off = length % bs
 
     def wr(pool, new):                      # new: (L, B, 1, Hkv, D)
-        return pool.at[:, blk, off].set(new[:, :, 0].astype(pool.dtype))
+        val = new[:, :, 0].astype(pool.dtype)
+        if step_mask is not None:
+            val = jnp.where(step_mask[None, :, None, None], val,
+                            pool[:, blk, off])
+        return pool.at[:, blk, off].set(val)
 
     return {"k": wr(kv["k"], upd["k_new"]), "v": wr(kv["v"], upd["v_new"])}
 
@@ -340,6 +352,7 @@ def _commit_kv_paged(kv: Dict, upd: Dict, length: jax.Array,
 def decode_step_paged(
     params: Params, cfg: ArchConfig, token: jax.Array, cache: Dict,
     block_tables: jax.Array, attn_backend: Optional[str] = None,
+    step_mask: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
     """One paged serving step: token (B,1) -> (logits (B,1,V), new cache).
 
@@ -350,6 +363,10 @@ def decode_step_paged(
     the attention core through a registered paged-attention kernel
     (``kernels/paged_attention.py``; ``reference`` / ``pallas-interpret``
     / ``pallas``) that never materializes the gathered view.
+    ``step_mask`` (B,) bool makes masked-out slots full no-ops (page
+    writes return old contents, lengths freeze) — the retirement mask
+    :func:`decode_multi_step_paged` applies to slots that finish
+    mid-horizon.
     """
     _check_paged_family(cfg)
     length = cache["length"]
@@ -386,8 +403,10 @@ def decode_step_paged(
         body, x, (params["blocks"], cache["kv"]["k"], cache["kv"]["v"])
     )
     new_cache = {
-        "kv": _commit_kv_paged(cache["kv"], kv_upd, length, block_tables),
-        "length": length + 1,
+        "kv": _commit_kv_paged(cache["kv"], kv_upd, length, block_tables,
+                               step_mask=step_mask),
+        "length": (length + 1 if step_mask is None
+                   else length + step_mask.astype(length.dtype)),
     }
     x = L.apply_norm(cfg.norm_type, params["final_norm"], x)
     logits = L.apply_lm_head(params["embed"], x, params.get("lm_head"))
@@ -515,13 +534,17 @@ def prefill_paged_suffix(
 # decode step
 # ---------------------------------------------------------------------------
 
-def _commit_kv(kv, upd, length):
+def _commit_kv(kv, upd, length, step_mask=None):
     """Write all layers' new-token K/V with ONE tiny in-place update
     (never rewrite the stacked cache inside the layer scan).
 
     ``length`` scalar: one write position for the whole batch.
     ``length`` (B,) vector: per-slot positions (continuous batching) —
     vmapped over the batch axis so each slot lands at its own offset.
+    ``step_mask`` (B,) bool (vector lengths only): slots with a False
+    mask get their OLD value written back — the commit is a true no-op
+    for retired slots inside :func:`decode_multi_step`, so the donated
+    cache never picks up junk from a slot that finished mid-horizon.
     """
     if jnp.ndim(length) == 0:
         return {
@@ -529,6 +552,16 @@ def _commit_kv(kv, upd, length):
                 kv["k"], upd["k_new"], (0, 0, length, 0, 0)),
             "v": jax.lax.dynamic_update_slice(
                 kv["v"], upd["v_new"], (0, 0, length, 0, 0)),
+        }
+    if step_mask is not None:
+        read = jax.vmap(
+            lambda c, l: jax.lax.dynamic_slice_in_dim(c, l, 1, axis=1),
+            in_axes=(1, 0), out_axes=1,
+        )
+        m = step_mask[None, :, None, None, None]
+        upd = {
+            "k_new": jnp.where(m, upd["k_new"], read(kv["k"], length)),
+            "v_new": jnp.where(m, upd["v_new"], read(kv["v"], length)),
         }
     write = jax.vmap(
         lambda c, u, l: jax.lax.dynamic_update_slice(c, u, (0, l, 0, 0)),
@@ -538,6 +571,21 @@ def _commit_kv(kv, upd, length):
         "k": write(kv["k"], upd["k_new"], length),
         "v": write(kv["v"], upd["v_new"], length),
     }
+
+
+def _select_slots(step_mask, new, old):
+    """Per-slot select between a step's new state and the old one.
+
+    Every stacked recurrent leaf has the slot ("batch") axis at
+    position 1 (see :func:`cache_insert`), so one broadcasted ``where``
+    per leaf freezes retired slots' state mid-horizon.
+    """
+    return jax.tree.map(
+        lambda n_, o_: jnp.where(
+            step_mask.reshape((1, -1) + (1,) * (n_.ndim - 2)), n_, o_
+        ),
+        new, old,
+    )
 
 
 def _ffn_block(lp, x, cfg: ArchConfig, q):
@@ -587,7 +635,8 @@ def _attn_decode_one(lp, x, kv, length, cfg: ArchConfig, params=None,
 
 
 def decode_step(
-    params: Params, cfg: ArchConfig, token: jax.Array, cache: Dict
+    params: Params, cfg: ArchConfig, token: jax.Array, cache: Dict,
+    step_mask: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
     """One serving step: token (B,1) -> (logits (B,1,V), updated cache).
 
@@ -595,11 +644,21 @@ def decode_step(
     batch in lockstep (static batching), an ``(B,)`` vector advances each
     slot at its own position (continuous batching via :func:`cache_init`
     / :func:`cache_insert`) — masking, RoPE and K/V writes are per-slot.
+
+    ``step_mask`` (B,) bool (vector lengths only) makes the step a full
+    cache no-op for masked-out slots: their length freezes, the K/V
+    commit writes their old value back, and recurrent state is held —
+    the retirement mask :func:`decode_multi_step` applies to slots that
+    finish mid-horizon, so a done slot's continued (batched) execution
+    cannot perturb the donated cache.
     """
     q = cfg.quant
     length = cache["length"]
     x = L.apply_embedding(params["embed"], token)
-    new_cache: Dict[str, Any] = {"length": length + 1}
+    new_cache: Dict[str, Any] = {
+        "length": (length + 1 if step_mask is None
+                   else length + step_mask.astype(length.dtype))
+    }
     plan = stack_plan(cfg)
 
     if cfg.family in ("dense", "vlm", "moe", "encdec"):
@@ -619,7 +678,8 @@ def decode_step(
             cache.get("cross", jnp.zeros((cfg.n_layers,))),
         )
         x, kv_upd = jax.lax.scan(body, x, xs)
-        new_cache["kv"] = _commit_kv(cache["kv"], kv_upd, length)
+        new_cache["kv"] = _commit_kv(cache["kv"], kv_upd, length,
+                                     step_mask=step_mask)
         if has_cross:
             new_cache["cross"] = cache["cross"]
     elif cfg.family == "hybrid":
@@ -656,10 +716,20 @@ def decode_step(
                 (grouped_p, grouped_c,
                  {"k": cache["kv_shared"]["k"], "v": cache["kv_shared"]["v"]}),
             )
-            new_cache["ssm_groups"] = jax.tree.map(
+            ssm_flat = jax.tree.map(
                 lambda a: a.reshape(g * pg, *a.shape[2:]), ssm_new
             )
-            new_cache["kv_shared"] = _commit_kv(cache["kv_shared"], kv_upd, length)
+            if step_mask is not None:
+                ssm_flat = _select_slots(step_mask, ssm_flat,
+                                         cache["ssm_groups"])
+            new_cache["ssm_groups"] = ssm_flat
+            new_cache["kv_shared"] = _commit_kv(
+                cache["kv_shared"], kv_upd, length, step_mask=step_mask)
+        else:
+            # g == 0 (pure-mamba stack): carry the empty group leaves so
+            # the cache pytree is step-invariant (while_loop carry)
+            new_cache["ssm_groups"] = cache.get("ssm_groups")
+            new_cache["kv_shared"] = cache.get("kv_shared")
         if tail:
             def tail_body(x_, ys):
                 lp, lc = ys
@@ -672,6 +742,9 @@ def decode_step(
             x, tail_new = jax.lax.scan(
                 tail_body, x, (params["mamba_tail"], cache["ssm_tail"])
             )
+            if step_mask is not None:
+                tail_new = _select_slots(step_mask, tail_new,
+                                         cache["ssm_tail"])
             new_cache["ssm_tail"] = tail_new
         else:
             new_cache["ssm_tail"] = cache.get("ssm_tail")
@@ -709,14 +782,27 @@ def decode_step(
                 superstep, x,
                 (grouped_p, grouped_c, params["slstm_blocks"], cache["slstm"]),
             )
-            new_cache["mlstm_groups"] = jax.tree.map(
+            ml_flat = jax.tree.map(
                 lambda a: a.reshape(g * pg, *a.shape[2:]), ml_new
             )
+            if step_mask is not None:
+                ml_flat = _select_slots(step_mask, ml_flat,
+                                        cache["mlstm_groups"])
+                sl_new = _select_slots(step_mask, sl_new, cache["slstm"])
+            new_cache["mlstm_groups"] = ml_flat
             new_cache["slstm"] = sl_new
+        else:
+            # g == 0: carry the empty group leaves so the cache pytree
+            # is step-invariant (while_loop carry)
+            new_cache["mlstm_groups"] = cache.get("mlstm_groups")
+            new_cache["slstm"] = cache.get("slstm")
         if tail:
             x, tail_new = jax.lax.scan(
                 ml_body, x, (params["mlstm_tail"], cache["mlstm_tail"])
             )
+            if step_mask is not None:
+                tail_new = _select_slots(step_mask, tail_new,
+                                         cache["mlstm_tail"])
             new_cache["mlstm_tail"] = tail_new
         else:
             new_cache["mlstm_tail"] = cache.get("mlstm_tail")
@@ -880,3 +966,107 @@ def prefill(
     else:
         cache["length"] = jnp.asarray(s, jnp.int32)
     return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# on-device multi-step decode
+# ---------------------------------------------------------------------------
+#
+# The serving hot loop. Instead of one jit call (and one host sync) per
+# token, the engine calls decode_multi_step once per *horizon*: a
+# lax.while_loop runs up to H decode steps entirely on device — greedy
+# argmax sampling, per-slot EOS / max-new-token flags, and retirement
+# masks (a slot that finishes mid-horizon keeps executing in the batch,
+# but its step is a full cache no-op via ``step_mask``, so cache
+# donation stays valid). The loop exits early once every live slot is
+# done, and the host syncs only at horizon boundaries — O(tokens/H)
+# round-trips per request instead of O(tokens).
+#
+# Greedy only: argmax needs no RNG carry and is what makes the loop
+# bit-exact-testable against the host loop. Temperature sampling stays
+# on the host path in serve/engine.py.
+
+
+def _multi_step_loop(step_fn, cache, last_tok, live, eos_ids, budget,
+                     horizon: int):
+    """Run ``step_fn`` up to ``horizon`` times under a device while-loop.
+
+    ``step_fn(cache, token_B1, emit_mask) -> (logits, cache)`` is one
+    masked decode step. Carry: (cache, last token, done mask, token
+    buffer, per-slot emitted count, per-slot remaining budget, step).
+    Returns ``(buf, emitted, done, last_tok, cache, steps)`` where
+    ``buf`` is (B, H) int32 with -1 in never-written positions.
+    """
+    n = last_tok.shape[0]
+    last_tok = constrain(last_tok.astype(jnp.int32), "batch")
+    done0 = constrain(jnp.logical_not(live) | (budget <= 0), "batch")
+    buf0 = constrain(jnp.full((n, horizon), -1, jnp.int32), "batch", None)
+    emitted0 = constrain(jnp.zeros((n,), jnp.int32), "batch")
+    budget0 = constrain(budget.astype(jnp.int32), "batch")
+    eos_ids = constrain(eos_ids.astype(jnp.int32), "batch")
+
+    def cond(carry):
+        _, _, done, _, _, _, s = carry
+        return (s < horizon) & jnp.any(~done)
+
+    def body(carry):
+        cache, last, done, buf, emitted, rem, s = carry
+        emit = ~done
+        logits, cache = step_fn(cache, last[:, None], emit)
+        tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        tok = constrain(jnp.where(emit, tok, -1), "batch")
+        buf = jax.lax.dynamic_update_slice(buf, tok[:, None], (0, s))
+        emitted = emitted + emit.astype(jnp.int32)
+        rem = rem - emit.astype(jnp.int32)
+        done = done | (emit & ((tok == eos_ids) | (rem <= 0)))
+        last = jnp.where(emit, tok, last)
+        return (cache, last, done, buf, emitted, rem, s + 1)
+
+    carry = (cache, last_tok, done0, buf0, emitted0, budget0,
+             jnp.asarray(0, jnp.int32))
+    cache, last, done, buf, emitted, _, steps = jax.lax.while_loop(
+        cond, body, carry
+    )
+    return buf, emitted, done, last, cache, steps
+
+
+def decode_multi_step(
+    params: Params, cfg: ArchConfig, cache: Dict, last_tok: jax.Array,
+    live: jax.Array, eos_ids: jax.Array, budget: jax.Array, horizon: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, Dict, jax.Array]:
+    """Up to ``horizon`` greedy decode steps on device (contiguous cache).
+
+    Args: ``last_tok`` (B,) last token per slot, ``live`` (B,) bool slot
+    occupancy, ``eos_ids`` (B,) per-request EOS (-1 = none), ``budget``
+    (B,) remaining new-token allowance. ``horizon`` is static — one
+    compile per horizon value. Returns ``(buf, emitted, done, last_tok,
+    cache, steps)``: ``buf[i, :emitted[i]]`` are slot i's new tokens.
+    Bit-exact with ``horizon`` host-driven :func:`decode_step` calls
+    under greedy sampling.
+    """
+    def step_fn(c, tok, emit):
+        return decode_step(params, cfg, tok, c, step_mask=emit)
+
+    return _multi_step_loop(step_fn, cache, last_tok, live, eos_ids,
+                            budget, horizon)
+
+
+def decode_multi_step_paged(
+    params: Params, cfg: ArchConfig, cache: Dict, block_tables: jax.Array,
+    last_tok: jax.Array, live: jax.Array, eos_ids: jax.Array,
+    budget: jax.Array, horizon: int, attn_backend: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, Dict, jax.Array]:
+    """Paged analogue of :func:`decode_multi_step`.
+
+    ``block_tables`` must already map every position the loop can write
+    — the engine pre-reserves min(horizon, budget) pages per live slot
+    via ``PagedKVManager.prepare_append`` before invoking this (and
+    falls back to horizon=1 for a round where a copy-on-write valve
+    would trigger mid-horizon; see ``PagedKVManager.mid_horizon_cow``).
+    """
+    def step_fn(c, tok, emit):
+        return decode_step_paged(params, cfg, tok, c, block_tables,
+                                 attn_backend=attn_backend, step_mask=emit)
+
+    return _multi_step_loop(step_fn, cache, last_tok, live, eos_ids,
+                            budget, horizon)

@@ -4,12 +4,19 @@ Small-scale-runnable (CPU) but structured like a real engine. Two
 scheduling modes share one API:
 
 ``continuous`` (default for KV-cache AND recurrent-state families)
-  * a fixed pool of ``max_batch`` decode slots runs one ``decode_step``
-    per iteration over the WHOLE pool — per-slot lengths in the stacked
-    cache (``models.decode.cache_init``) keep every slot at its own
-    position,
-  * finished sequences (EOS or max tokens) retire at every decode step,
-    freeing their slot immediately,
+  * a fixed pool of ``max_batch`` decode slots advances over the WHOLE
+    pool — per-slot lengths in the stacked cache
+    (``models.decode.cache_init``) keep every slot at its own position.
+    Greedy serving runs the on-device horizon loop
+    (``models.decode.decode_multi_step``): ONE jit call takes up to
+    ``decode_horizon`` steps with on-device argmax and per-slot
+    EOS/budget flags, so the host syncs once per horizon instead of
+    once per token (``temperature > 0`` keeps the per-token
+    host-sampled path),
+  * finished sequences (EOS or max tokens) retire at every horizon
+    boundary — mid-horizon they keep executing under a retirement mask
+    that makes their steps cache no-ops — freeing their slot
+    immediately,
   * queued requests are admitted into free slots at decode-step
     boundaries: prompts are right-padded to a power-of-two length bucket,
     prefilled as a batch, and each row's prefilled cache is scattered
@@ -72,7 +79,7 @@ from jax.sharding import Mesh
 from repro.configs.base import ArchConfig
 from repro.models import decode as D
 from repro.parallel.sharding import RULES_2D, axis_rules
-from repro.serve.paged_kv import PagedKVManager
+from repro.serve.paged_kv import PagedKVManager, PoolExhausted
 
 PyTree = Any
 
@@ -116,6 +123,13 @@ class EngineConfig:
     mode: str = "auto"            # auto | continuous | static
     prefill_batch: int = 4        # max requests per bucketed prefill call
     min_bucket: int = 8           # smallest prompt-length bucket
+    eos_id: int = -1              # default EOS for submit() (-1: never)
+    # on-device multi-step decode (continuous greedy serving only):
+    # one jit call advances every slot up to decode_horizon steps
+    # (models.decode.decode_multi_step) — host syncs per horizon, not
+    # per token. device_loop=False forces the legacy per-token path.
+    decode_horizon: int = 1
+    device_loop: bool = True
     # paged KV layout (continuous scheduler only; see docs/memory.md)
     paged: bool = False           # page pool + block tables vs stripes
     block_size: int = 16          # tokens per KV page (divides max_len)
@@ -155,6 +169,28 @@ class ServeEngine:
         self._key = jax.random.PRNGKey(ecfg.seed)
         self.mode = self._resolve_mode()
 
+        if ecfg.decode_horizon < 1:
+            raise ValueError(
+                f"decode_horizon must be >= 1, got {ecfg.decode_horizon}"
+            )
+        if ecfg.decode_horizon > 1 and ecfg.temperature > 0.0:
+            raise ValueError(
+                "decode_horizon > 1 runs the on-device greedy loop; "
+                "temperature sampling needs the per-token host path "
+                "(set decode_horizon=1)"
+            )
+        if ecfg.decode_horizon > 1 and not ecfg.device_loop:
+            raise ValueError(
+                "decode_horizon > 1 requires device_loop=True"
+            )
+        # the device loop is greedy-only (on-device argmax, no RNG
+        # carry); temperature > 0 stays on the host-sampled path
+        self._use_device_loop = (
+            self.mode == "continuous"
+            and ecfg.device_loop
+            and ecfg.temperature <= 0.0
+        )
+
         # multi-device serving: the rules activate around every traced
         # function, so cache slots shard over "data" (via the model's
         # constrain() annotations) and packed PSQ layers go tensor-
@@ -165,6 +201,8 @@ class ServeEngine:
 
         # scheduler telemetry (continuous mode)
         self.decode_steps = 0
+        self.host_syncs = 0              # decode round-trips (jit + drain)
+        self.decode_wall_s = 0.0         # wall time inside decode syncs
         self.prefill_calls = 0
         self.prefill_tokens = 0          # true (unpadded) tokens prefilled
         self.cached_prefix_tokens = 0    # prompt tokens served from pages
@@ -242,10 +280,21 @@ class ServeEngine:
                     "v": kv["v"].at[:, dst].set(kv["v"][:, src]),
                 }}
 
+            def _decode_multi_paged(p, cache, bt, last, live, eos, budget,
+                                    horizon):
+                with self._ctx():
+                    return D.decode_multi_step_paged(
+                        p, cfg, cache, bt, last, live, eos, budget,
+                        horizon, attn_backend=ecfg.paged_attn_backend,
+                    )
+
             self._decode_paged = jax.jit(_decode_paged, donate_argnums=(2,))
             self._insert_paged = jax.jit(_insert_paged, donate_argnums=(0,))
             self._prefill_suffix = jax.jit(_prefill_suffix)
             self._copy_page = jax.jit(_copy_page, donate_argnums=(0,))
+            # horizon is static: one compile per horizon value
+            self._decode_multi_paged = jax.jit(
+                _decode_multi_paged, donate_argnums=(1,), static_argnums=(7,))
 
         # static path: prefill allocates the full decode-capacity cache
         def _prefill_full(p, b):
@@ -276,12 +325,23 @@ class ServeEngine:
             with self._ctx():
                 return D.cache_insert(dst, src, row, slot, ln)
 
+        # the on-device horizon loop: up to `horizon` greedy steps per
+        # call, cache donated across the whole loop
+        def _decode_multi(p, cache, last, live, eos, budget, horizon):
+            with self._ctx():
+                return D.decode_multi_step(
+                    p, cfg, cache, last, live, eos, budget, horizon
+                )
+
         # fresh closures per engine so compile-cache accounting
         # (_cache_size) is per-instance, not shared module-level state
         self._prefill_full = jax.jit(_prefill_full)
         self._prefill_bucket = jax.jit(_prefill_bucket)
         self._decode = jax.jit(_decode, donate_argnums=(2,))
         self._insert = jax.jit(_insert, donate_argnums=(0,))
+        # horizon is static: one compile per horizon value
+        self._decode_multi = jax.jit(
+            _decode_multi, donate_argnums=(1,), static_argnums=(6,))
 
     def _ctx(self):
         """Rules-activation context entered at trace time (and for the
@@ -317,7 +377,15 @@ class ServeEngine:
 
     # -- API ---------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
-               eos_id: int = -1) -> int:
+               eos_id: Optional[int] = None) -> int:
+        """Enqueue a prompt; returns its uid.
+
+        ``eos_id=None`` (the default) resolves to
+        ``EngineConfig.eos_id``; an explicit per-request value always
+        wins over the config.
+        """
+        if eos_id is None:
+            eos_id = self.ecfg.eos_id
         prompt = np.asarray(prompt, np.int32)
         if len(prompt) + max_new_tokens > self.ecfg.max_len:
             raise ValueError(
@@ -349,6 +417,8 @@ class ServeEngine:
         benchmarks can measure a post-warm-up run."""
         self.finished = []
         self.decode_steps = 0
+        self.host_syncs = 0
+        self.decode_wall_s = 0.0
         self.prefill_calls = 0
         self.prefill_tokens = 0
         self.cached_prefix_tokens = 0
@@ -362,6 +432,10 @@ class ServeEngine:
         out = {
             "mode": self.mode,
             "decode_steps": self.decode_steps,
+            "host_syncs": self.host_syncs,
+            "decode_wall_s": self.decode_wall_s,
+            "mean_step_s": (self.decode_wall_s / self.decode_steps
+                            if self.decode_steps else 0.0),
             "prefill_calls": self.prefill_calls,
             "prefill_tokens": self.prefill_tokens,
             "cached_prefix_tokens": self.cached_prefix_tokens,
@@ -481,16 +555,61 @@ class ServeEngine:
         through the same pow2-bucketed prefill as the contiguous path,
         then scatter into their private pages. Either way, the prompt's
         full pages are published to the index for later requests.
+
+        Returns ``(cache, progressed)``. ``progressed=False`` means the
+        page pool could not hold the queue head (``PoolExhausted``
+        rolled the partial allocation back): nothing was admitted, and
+        the caller must STOP admitting and decode instead — retirement
+        frees pages — rather than spin on the same head.
         """
         if self._mgr.match_tokens([int(t) for t in self.queue[0].prompt]):
             return self._admit_paged_suffix(cache, slots, last_tok, free)
         return self._admit_paged_cold(cache, slots, last_tok, free)
 
+    def _worst_case_pages(self, r: Request) -> int:
+        """Pages ``r`` occupies if it decodes to its full budget: the
+        cache length peaks at len(prompt) + max_new_tokens - 1 (the last
+        sampled token is never appended)."""
+        end = len(r.prompt) + r.max_new_tokens - 1
+        return -(-end // self.ecfg.block_size)
+
+    def _paged_headroom(self, slots: List[Optional[Request]]) -> int:
+        """Free pages minus the growth still owed to live slots.
+
+        Admission must budget for decode growth, not just the prompt:
+        admitting on prompt pages alone can deadlock mid-decode when
+        every live slot needs its next page and nothing is retirable.
+        Gating on this headroom keeps the invariant that owed growth
+        always fits the free list, so ``prepare_append`` cannot exhaust
+        the pool between horizon boundaries.
+        """
+        owed = 0
+        for i, s in enumerate(slots):
+            if s is None:
+                continue
+            owed += max(0, self._worst_case_pages(s)
+                        - len(self._mgr.slot_blocks(i)))
+        return self._mgr.pool.free_blocks - owed
+
     def _admit_paged_suffix(self, cache, slots, last_tok, free):
-        r = self.queue.pop(0)
-        slot = free.pop(0)
+        # peek, don't pop: if the pool can't hold the head's pages the
+        # request must stay queued (admit() rolls its allocation back)
+        r = self.queue[0]
+        slot = free[0]
         prompt = [int(t) for t in r.prompt]
-        cached = self._mgr.admit(slot, prompt)
+        # full shared prefix pages are reused; everything else — the
+        # prompt tail AND the decode growth — must fit the headroom
+        cached_probe = self._mgr.match_tokens(prompt)
+        need = (self._worst_case_pages(r)
+                - cached_probe // self.ecfg.block_size)
+        if need > self._paged_headroom(slots):
+            return cache, False
+        try:
+            cached = self._mgr.admit(slot, prompt)
+        except PoolExhausted:
+            return cache, False
+        self.queue.pop(0)
+        free.pop(0)
         suffix = r.prompt[cached:]
         w = self._bucket(len(suffix))
         toks = np.zeros((1, w), np.int32)
@@ -515,7 +634,7 @@ class ServeEngine:
         first = np.asarray(self._sample(logits[:, len(suffix) - 1]))
         self._place_admitted(r, slot, int(first[0]), slots, last_tok,
                              time.time())
-        return cache
+        return cache, True
 
     def _admit_paged_cold(self, cache, slots, last_tok, free):
         # same take policy as the contiguous _admit: the queue head plus
@@ -532,29 +651,49 @@ class ServeEngine:
                     and not self._mgr.match_tokens(
                         [int(t) for t in r.prompt])):
                 take.append(r)
-        for r in take:
-            self.queue.remove(r)
 
-        m = len(take)
-        mp = min(_next_pow2(m), self.ecfg.prefill_batch)
-        toks, lens = self._right_pad(take, mp, w)
         # claim pages first so nothing registers mid-batch: identical
         # prompts inside one cold batch each prefill privately (the
-        # second one hits the index only on a LATER admission)
+        # second one hits the index only on a LATER admission). A
+        # PoolExhausted admit rolls itself back and stops the batch
+        # there — only successfully-placed requests leave the queue,
+        # the rest wait for retirement to free pages.
         placed = []
-        for i, r in enumerate(take):
-            slot = free.pop(0)
+        headroom = self._paged_headroom(slots)
+        for r in take:
+            slot = free[0]
             prompt = [int(t) for t in r.prompt]
-            self._mgr.admit(slot, prompt)
-            placed.append((i, r, slot, prompt))
+            # gate on the full worst case (prompt + decode growth), not
+            # just the prompt pages admit() allocates now — earlier
+            # batch members' growth stays owed against the same free
+            # list until they retire
+            need = self._worst_case_pages(r)
+            if need > headroom:
+                break
+            try:
+                self._mgr.admit(slot, prompt)
+            except PoolExhausted:
+                break
+            headroom -= need         # prompt pages taken + growth owed
+            free.pop(0)
+            placed.append((r, slot, prompt))
+        if not placed:
+            return cache, False
+        for r, _, _ in placed:
+            self.queue.remove(r)
+
+        m = len(placed)
+        mp = min(_next_pow2(m), self.ecfg.prefill_batch)
+        toks, lens = self._right_pad([r for r, _, _ in placed], mp, w)
         logits, pcache = self._prefill_bucket(
             self.params, jnp.asarray(toks), jnp.asarray(lens))
         self.prefill_calls += 1
-        self.prefill_tokens += sum(len(r.prompt) for r in take)
-        idx = jnp.asarray([len(r.prompt) - 1 for r in take] + [0] * (mp - m))
+        self.prefill_tokens += sum(len(r.prompt) for r, _, _ in placed)
+        idx = jnp.asarray([len(r.prompt) - 1 for r, _, _ in placed]
+                          + [0] * (mp - m))
         first = np.asarray(self._sample(logits[jnp.arange(mp), idx]))
         now = time.time()
-        for i, r, slot, prompt in placed:
+        for i, (r, slot, prompt) in enumerate(placed):
             cache = self._insert_paged(
                 cache, pcache["kv"], i, slot,
                 jnp.asarray(self._mgr.tables[slot]), np.int32(0),
@@ -562,7 +701,7 @@ class ServeEngine:
             self._mgr.register(slot, prompt)
             self._place_admitted(r, slot, int(first[i]), slots, last_tok,
                                  now)
-        return cache
+        return cache, True
 
     def _run_continuous(self):
         n = self.ecfg.max_batch
@@ -581,51 +720,168 @@ class ServeEngine:
         last_tok = np.zeros((n,), np.int32)
         try:
             while self.queue or any(s is not None for s in slots):
-                # admission at the decode-step boundary
-                while self.queue and any(s is None for s in slots):
+                # admission at the horizon boundary. `stalled` breaks
+                # the loop when the paged pool can't hold the queue
+                # head (admit rolled back) — decoding frees pages via
+                # retirement, so we must fall through, NOT spin here.
+                stalled = False
+                while (self.queue and any(s is None for s in slots)
+                       and not stalled):
                     free = [i for i, s in enumerate(slots) if s is None]
                     if paged:
-                        cache = self._admit_paged(cache, slots, last_tok,
-                                                  free)
+                        cache, progressed = self._admit_paged(
+                            cache, slots, last_tok, free)
+                        stalled = not progressed
                     else:
                         cache = self._admit(cache, slots, last_tok, free)
                 if not any(s is not None for s in slots):
+                    if stalled:
+                        # nothing live to retire: the pool can never
+                        # hold the queue head — surface it instead of
+                        # spinning forever
+                        raise PoolExhausted(
+                            f"page pool ({self._mgr.pool.num_blocks} "
+                            f"blocks) cannot hold the queue head's "
+                            f"prompt plus its decode budget with no "
+                            f"live slots left to retire; raise "
+                            f"num_blocks"
+                        )
                     continue                         # all admits retired at t=1
-                self.step_occupancy.append(
-                    sum(s is not None for s in slots) / n)
-                if paged:
-                    # grow each live slot's table by one token (a fresh
-                    # page at block boundaries, copy-on-write if shared)
-                    for i, s in enumerate(slots):
-                        if s is None:
-                            continue
-                        cow = self._mgr.prepare_append(i)
-                        if cow is not None:
-                            cache = self._copy_page(cache, *cow)
-                    logits, cache = self._decode_paged(
-                        self.params, jnp.asarray(last_tok)[:, None], cache,
-                        jnp.asarray(self._mgr.tables))
+                if self._use_device_loop:
+                    cache = self._horizon_step(cache, slots, last_tok, paged)
                 else:
-                    logits, cache = self._decode(
-                        self.params, jnp.asarray(last_tok)[:, None], cache)
-                nxt = np.asarray(self._sample(logits[:, 0]))
-                self.decode_steps += 1
-                now = time.time()
-                for i, r in enumerate(slots):
-                    if r is None:
-                        continue
-                    t = int(nxt[i])
-                    r.output.append(t)
-                    last_tok[i] = t
-                    if t == r.eos_id or len(r.output) >= r.max_new_tokens:
-                        self._retire(r, now)
-                        slots[i] = None              # freed THIS step
-                        if paged:
-                            self._mgr.retire(i)
+                    cache = self._host_step(cache, slots, last_tok, paged)
         finally:
             if paged:
                 self._kv_cache = cache               # donated: keep the live
                 # handle so the next run() reuses indexed prefix pages
+
+    def _horizon_step(self, cache, slots: List[Optional[Request]],
+                      last_tok: np.ndarray, paged: bool):
+        """One host round-trip: up to ``decode_horizon`` decode steps on
+        device (``models.decode.decode_multi_step[_paged]``), then drain
+        the returned token buffer, stamp ONE boundary timestamp, and
+        retire finished slots. The loop exits early on device once every
+        live slot is done, so short tails don't burn horizon steps."""
+        n = self.ecfg.max_batch
+        h = self.ecfg.decode_horizon
+        live = np.array([s is not None for s in slots])
+        budget = np.zeros((n,), np.int32)
+        eos = np.full((n,), -1, np.int32)
+        for i, r in enumerate(slots):
+            if r is None:
+                continue
+            budget[i] = r.max_new_tokens - len(r.output)
+            eos[i] = r.eos_id
+        t0 = time.time()
+        if paged:
+            # a CoW valve can only resolve on the host; if one would
+            # trigger past the first position (reachable via fork()
+            # only — full-page publishing keeps shared pages full),
+            # fall back to a single-step round
+            if any(self._mgr.mid_horizon_cow(i, min(h, int(budget[i])))
+                   for i, s in enumerate(slots) if s is not None):
+                h = 1
+
+            # never pre-reserve past the pool: shrink this round's
+            # horizon until the worst-case fresh-page demand fits the
+            # free list (halving keeps the static-horizon compile set
+            # at O(log H) entries under sustained pressure)
+            bs = self.ecfg.block_size
+
+            def _new_pages(hh: int) -> int:
+                need = 0
+                for i, s in enumerate(slots):
+                    if s is None:
+                        continue
+                    end = int(self._mgr.lengths[i]) + min(hh, int(budget[i]))
+                    need += max(0, -(-end // bs)
+                                - len(self._mgr.slot_blocks(i)))
+                return need
+
+            while h > 1 and _new_pages(h) > self._mgr.pool.free_blocks:
+                h //= 2
+            # pre-reserve the whole horizon: grow each live slot's
+            # table min(h, budget) tokens ahead (fresh pages at block
+            # boundaries, eager copy-on-write when shared) so the
+            # device loop never needs the host mid-horizon
+            for i, s in enumerate(slots):
+                if s is None:
+                    continue
+                for _ in range(min(h, int(budget[i]))):
+                    cow = self._mgr.prepare_append(i)
+                    if cow is not None:
+                        cache = self._copy_page(cache, *cow)
+            buf, emitted, done, last, cache, steps = self._decode_multi_paged(
+                self.params, cache, jnp.asarray(self._mgr.tables),
+                jnp.asarray(last_tok), jnp.asarray(live),
+                jnp.asarray(eos), jnp.asarray(budget), h)
+        else:
+            buf, emitted, done, last, cache, steps = self._decode_multi(
+                self.params, cache, jnp.asarray(last_tok),
+                jnp.asarray(live), jnp.asarray(eos), jnp.asarray(budget), h)
+        buf, emitted = np.asarray(buf), np.asarray(emitted)
+        done, last, steps = np.asarray(done), np.asarray(last), int(steps)
+        now = time.time()
+        self.host_syncs += 1
+        self.decode_wall_s += now - t0
+        self.decode_steps += steps
+        # occupancy per DEVICE step: slot i was live at step s of the
+        # horizon iff it emitted more than s tokens
+        for s in range(steps):
+            self.step_occupancy.append(float(np.sum(emitted > s)) / n)
+        for i, r in enumerate(slots):
+            if r is None:
+                continue
+            r.output.extend(int(t) for t in buf[i, :emitted[i]])
+            last_tok[i] = int(last[i])
+            if done[i]:
+                self._retire(r, now)
+                slots[i] = None              # freed at THIS boundary
+                if paged:
+                    self._mgr.retire(i)
+        return cache
+
+    def _host_step(self, cache, slots: List[Optional[Request]],
+                   last_tok: np.ndarray, paged: bool):
+        """Legacy per-token round-trip (temperature sampling, or
+        ``device_loop=False``): one decode step, host-side sampling,
+        EOS/budget checks and retirement."""
+        n = self.ecfg.max_batch
+        self.step_occupancy.append(sum(s is not None for s in slots) / n)
+        t0 = time.time()
+        if paged:
+            # grow each live slot's table by one token (a fresh
+            # page at block boundaries, copy-on-write if shared)
+            for i, s in enumerate(slots):
+                if s is None:
+                    continue
+                cow = self._mgr.prepare_append(i)
+                if cow is not None:
+                    cache = self._copy_page(cache, *cow)
+            logits, cache = self._decode_paged(
+                self.params, jnp.asarray(last_tok)[:, None], cache,
+                jnp.asarray(self._mgr.tables))
+        else:
+            logits, cache = self._decode(
+                self.params, jnp.asarray(last_tok)[:, None], cache)
+        nxt = np.asarray(self._sample(logits[:, 0]))
+        self.decode_steps += 1
+        self.host_syncs += 1
+        now = time.time()
+        self.decode_wall_s += now - t0
+        for i, r in enumerate(slots):
+            if r is None:
+                continue
+            t = int(nxt[i])
+            r.output.append(t)
+            last_tok[i] = t
+            if t == r.eos_id or len(r.output) >= r.max_new_tokens:
+                self._retire(r, now)
+                slots[i] = None              # freed THIS step
+                if paged:
+                    self._mgr.retire(i)
+        return cache
 
     # -- static batching ------------------------------------------------------
     def _pad_prompts(self, reqs: List[Request]) -> np.ndarray:
@@ -760,6 +1016,15 @@ def throughput_stats(reqs: List[Request]) -> Dict[str, float]:
     not to TTFT (no first token to time); a request list with no finish
     timestamps falls back to enqueue time so ``tokens_per_s`` is 0 rather
     than garbage.
+
+    Per-token latency (``mean_tpot_s``) is derived from the two REAL
+    timestamps each request has — first token at admission, completion
+    at its retirement boundary — divided by its decode-token count.
+    Under the device horizon loop the engine only touches the host at
+    horizon boundaries, so there are no per-token wall times to average
+    (and none are fabricated): the boundary-to-boundary quotient is the
+    honest figure at every ``decode_horizon``, and degrades gracefully
+    to true per-token latency at horizon 1.
     """
     if not reqs:
         return {}
@@ -769,10 +1034,16 @@ def throughput_stats(reqs: List[Request]) -> Dict[str, float]:
     elapsed = (max(finished) - t0) if finished else 0.0
     started = [r for r in reqs if r.t_first_token > 0.0]
     ttft = [r.t_first_token - r.t_enqueue for r in started]
+    tpot = [
+        (r.t_done - r.t_first_token) / max(len(r.output) - 1, 1)
+        for r in reqs
+        if r.t_done and r.t_first_token and len(r.output) > 1
+    ]
     return {
         "requests": len(reqs),
         "started": len(started),
         "total_tokens": total_tokens,
         "tokens_per_s": total_tokens / elapsed if elapsed > 0 else 0.0,
         "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
+        "mean_tpot_s": float(np.mean(tpot)) if tpot else 0.0,
     }

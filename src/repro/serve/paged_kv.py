@@ -380,6 +380,30 @@ class PagedKVManager:
         self.lengths[slot] = pos + 1
         return cow
 
+    def mid_horizon_cow(self, slot: int, steps: int) -> bool:
+        """Would a copy-on-write valve trigger *mid*-horizon for this slot?
+
+        Non-mutating probe for the device-loop engine: before running
+        ``steps`` decode steps on device, positions ``lengths[slot] + 1
+        .. lengths[slot] + steps - 1`` must not land in a *shared* page
+        — the engine can eagerly resolve a CoW at the first position
+        (it copies the page before launching the loop) but not at later
+        ones, because the device loop never returns to the host between
+        steps. Returns True if any later position's page is shared
+        (refcount > 1), in which case the engine falls back to
+        horizon=1 for this round. Under the full-page publishing rule
+        shared pages are always full, so this is only reachable via
+        :meth:`fork`; the probe is conservative and cheap either way.
+        """
+        pos0 = int(self.lengths[slot])
+        bs = self.block_size
+        blocks = self._slot_blocks[slot]
+        for j in range(1, steps):
+            bi = (pos0 + j) // bs
+            if bi < len(blocks) and self.pool.refcount(blocks[bi]) > 1:
+                return True
+        return False
+
     def fork(self, src_slot: int, dst_slot: int) -> None:
         """Share ``src_slot``'s whole table with ``dst_slot`` (ref-bumped).
 

@@ -168,6 +168,25 @@ class TestPagedKVManager:
         assert mgr.stats()["cow_copies"] == 1
         mgr.check_invariants()
 
+    def test_mid_horizon_cow_probe(self):
+        """Non-mutating probe for the device-loop engine: True iff a
+        horizon position PAST the first would land in a shared page
+        (only reachable via fork — the first position's CoW resolves on
+        the host before the loop launches)."""
+        mgr = self._mk(reuse=False)
+        mgr.admit(0, [1, 2, 3, 4, 5, 6])           # pages [b0, b1], len 6
+        mgr.fork(0, 1)
+        free_before = mgr.pool.free_blocks
+        # first write (pos 6) is host-resolvable: 1-step rounds are safe
+        assert not mgr.mid_horizon_cow(1, 1)
+        # but position 7 hits the still-shared second page mid-loop
+        assert mgr.mid_horizon_cow(1, 2)
+        assert mgr.pool.free_blocks == free_before     # probe mutated nothing
+        cow = mgr.prepare_append(1)                # pos 6: CoW resolves now
+        assert cow is not None
+        assert not mgr.mid_horizon_cow(1, 4)       # all private/fresh ahead
+        mgr.check_invariants()
+
     def test_failed_admit_rolls_back_all_page_refs(self):
         """PoolExhausted mid-admit must release lookup-retained prefix
         pages AND already-allocated private pages — no permanent leak."""
@@ -329,8 +348,8 @@ class TestPagedEngineParity:
         eng = ServeEngine(params, cfg,
                           EngineConfig(max_batch=4, max_len=64, paged=True,
                                        block_size=8))
-        fns = [eng._decode_paged, eng._prefill_bucket, eng._prefill_suffix,
-               eng._insert_paged]
+        fns = [eng._decode_multi_paged, eng._prefill_bucket,
+               eng._prefill_suffix, eng._insert_paged]
         if not all(hasattr(f, "_cache_size") for f in fns):
             pytest.skip("jax version without jit _cache_size introspection")
         for p in shared_prompts:
@@ -355,6 +374,48 @@ class TestPagedEngineParity:
                                max_new=4, paged=True, prefix_reuse=True)
         assert out == base
         assert eng.stats()["mesh"] == "data=2xmodel=1"
+
+
+class TestPoolPressure:
+    """A page pool smaller than the queue's concurrent demand must
+    degrade to serialized serving, never hang or crash."""
+
+    def _prompts(self, cfg, n=4, plen=12, seed=11):
+        rng = np.random.RandomState(seed)
+        return [rng.randint(0, cfg.vocab_size, size=plen) for _ in range(n)]
+
+    @pytest.mark.parametrize("horizon", [1, 8])
+    def test_tiny_pool_admission_stall_decodes_through(self, tiny, horizon):
+        """Regression (busy-spin): with a deliberately tiny num_blocks
+        pool, the admission loop used to spin forever once admit rolled
+        back on PoolExhausted while free slots stayed open. The engine
+        must instead break to decode — retirement frees pages — and
+        still serve every request with the unconstrained outputs."""
+        cfg, params = tiny
+        prompts = self._prompts(cfg)    # each needs 3 pages (12+8 tok)
+        base, _ = _run_engine(params, cfg, prompts, max_new=8)
+        # 6 usable pages => at most two requests in flight; reuse off so
+        # retired pages return to the free list immediately
+        out, eng = _run_engine(params, cfg, prompts, max_new=8, paged=True,
+                               num_blocks=7, prefix_reuse=False,
+                               decode_horizon=horizon)
+        assert out == base
+        assert eng.stats()["paged"]["free_blocks"] == 6   # nothing leaked
+
+    def test_pool_too_small_for_one_request_raises(self, tiny):
+        """An admission stall with NO live slots to retire can never
+        resolve — the engine must surface PoolExhausted instead of
+        spinning on the queue head forever."""
+        cfg, params = tiny
+        rng = np.random.RandomState(12)
+        prompt = rng.randint(0, cfg.vocab_size, size=20)  # needs 3 pages
+        eng = ServeEngine(params, cfg,
+                          EngineConfig(max_batch=2, max_len=64, paged=True,
+                                       block_size=8, num_blocks=3,
+                                       prefix_reuse=False))
+        eng.submit(prompt, max_new_tokens=4)
+        with pytest.raises(PoolExhausted, match="num_blocks"):
+            eng.run()
 
 
 # ---------------------------------------------------------------------------

@@ -135,7 +135,7 @@ class TestJitStability:
     def test_no_recompile_after_warmup(self, models, arch):
         cfg, params = models[arch]
         eng = ServeEngine(params, cfg, EngineConfig(max_batch=4, max_len=64))
-        fns = [eng._decode, eng._prefill_bucket, eng._insert]
+        fns = [eng._decode_multi, eng._prefill_bucket, eng._insert]
         if not all(hasattr(f, "_cache_size") for f in fns):
             pytest.skip("jax version without jit _cache_size introspection")
         rng = np.random.RandomState(1)
@@ -145,7 +145,7 @@ class TestJitStability:
             eng.submit(p, max_new_tokens=mn)
         eng.run()
         warm = [f._cache_size() for f in fns]
-        assert warm[0] == 1, "recurrent decode step must compile exactly once"
+        assert warm[0] == 1, "recurrent decode loop must compile exactly once"
         for p, mn in trace:
             eng.submit(p, max_new_tokens=mn)
         eng.run()

@@ -91,7 +91,7 @@ class TestContinuousScheduling:
         adds zero compilations."""
         cfg, params = tiny
         eng = ServeEngine(params, cfg, EngineConfig(max_batch=4, max_len=64))
-        fns = [eng._decode, eng._prefill_bucket, eng._insert]
+        fns = [eng._decode_multi, eng._prefill_bucket, eng._insert]
         if not all(hasattr(f, "_cache_size") for f in fns):
             pytest.skip("jax version without jit _cache_size introspection")
 
@@ -102,7 +102,7 @@ class TestContinuousScheduling:
             eng.submit(p, max_new_tokens=mn)
         eng.run()
         warm = [f._cache_size() for f in fns]
-        assert warm[0] == 1, "decode step must compile exactly once"
+        assert warm[0] == 1, "decode loop must compile exactly once"
 
         for p, mn in trace:
             eng.submit(p, max_new_tokens=mn)
@@ -151,6 +151,31 @@ class TestContinuousScheduling:
         eng = ServeEngine(params, cfg, EngineConfig(max_batch=1, max_len=16))
         with pytest.raises(ValueError, match="max_len"):
             eng.submit(np.arange(10), max_new_tokens=10)
+
+    def test_engine_config_eos_id_is_live(self, tiny):
+        """Regression: EngineConfig.eos_id used to be dead config —
+        submit() hardcoded its own -1 default and never consulted it.
+        The config value must now apply to submits without an explicit
+        eos_id, and an explicit per-request value must win over it."""
+        cfg, params = tiny
+        rng = np.random.RandomState(5)
+        prompt = rng.randint(0, cfg.vocab_size, size=6)
+        ref = _greedy_outputs(cfg, params, prompt, 12)
+        eos, cut = None, None
+        for k in range(1, len(ref)):
+            if ref[k] not in ref[:k]:
+                eos, cut = ref[k], k
+                break
+        if eos is None:
+            pytest.skip("degenerate greedy output: no usable EOS token")
+        # config default reaches the request: output truncates at EOS
+        assert _greedy_outputs(cfg, params, prompt, 12,
+                               eos_id=eos) == ref[:cut + 1]
+        # explicit per-request eos_id overrides the config
+        eng = ServeEngine(params, cfg,
+                          EngineConfig(max_batch=1, max_len=64, eos_id=eos))
+        eng.submit(prompt, max_new_tokens=12, eos_id=-1)
+        assert eng.run()[0].output == ref
 
 
 class TestStaticScheduling:
@@ -265,7 +290,7 @@ class TestShardedServing:
         mesh = jax.make_mesh((2, 1), ("data", "model"))
         eng = ServeEngine(params, cfg,
                           EngineConfig(max_batch=4, max_len=64), mesh=mesh)
-        fns = [eng._decode, eng._prefill_bucket, eng._insert]
+        fns = [eng._decode_multi, eng._prefill_bucket, eng._insert]
         if not all(hasattr(f, "_cache_size") for f in fns):
             pytest.skip("jax version without jit _cache_size introspection")
         for p in prompts:
