@@ -1,22 +1,83 @@
-"""Fig 5(a): DCiM energy vs ternary sparsity (24% saving at 50%)."""
+"""Fig 5(a): DCiM energy vs ternary sparsity (24% saving at 50%).
+
+    PYTHONPATH=src python benchmarks/fig5a_sparsity.py \
+        [--smoke] [--sparsities 0.0,0.5,0.9] [--json OUT.json]
+
+The sweep grid is parameterizable: ``--sparsities`` (or the
+``sparsities`` argument to :func:`run`) overrides the default
+seven-point grid, ``--smoke`` shrinks it to three points for CI, and
+``--json`` writes the rows as valid JSON instead of CSV. The harness
+(``benchmarks/run.py``) forwards its own ``--sparsities`` knob here.
+"""
 from __future__ import annotations
 
-import time
-from typing import List, Tuple
+import argparse
+import json
+from typing import List, Optional, Sequence, Tuple
 
 from repro.hwmodel import dcim_column_energy_pj
 
+DEFAULT_GRID = (0.0, 0.1, 0.25, 0.5, 0.65, 0.75, 0.9)
+SMOKE_GRID = (0.0, 0.5, 0.9)
 
-def run(fast: bool = False) -> List[Tuple[str, float, str]]:
+
+def run(fast: bool = False,
+        sparsities: Optional[Sequence[float]] = None,
+        ) -> List[Tuple[str, float, str]]:
+    grid = tuple(sparsities) if sparsities is not None else DEFAULT_GRID
     rows = []
     e0 = dcim_column_energy_pj(0.0)
-    for sp in [0.0, 0.1, 0.25, 0.5, 0.65, 0.75, 0.9]:
+    for sp in grid:
         e = dcim_column_energy_pj(sp)
-        rows.append((f"fig5a/sparsity_{int(sp*100):02d}", 0.0,
+        rows.append((f"fig5a/sparsity_{int(sp * 100):02d}", 0.0,
                      f"e_pj={e:.4f},reduction={1 - e / e0:.3f}"))
     return rows
 
 
+def rows_to_json(rows: List[Tuple[str, float, str]]) -> List[dict]:
+    """CSV rows -> JSON-friendly dicts (derived k=v pairs parsed out)."""
+    out = []
+    for name, us, derived in rows:
+        entry = {"name": name, "us_per_call": us}
+        for kv in derived.split(","):
+            k, v = kv.split("=", 1)
+            try:
+                entry[k] = float(v)
+            except ValueError:
+                entry[k] = v
+        out.append(entry)
+    return out
+
+
+def _parse_sparsities(text: str) -> List[float]:
+    vals = [float(v) for v in text.split(",") if v.strip()]
+    bad = [v for v in vals if not 0.0 <= v <= 1.0]
+    if bad:
+        raise SystemExit(f"--sparsities values must be in [0, 1], got {bad}")
+    return vals
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"three-point CI grid {SMOKE_GRID}")
+    ap.add_argument("--sparsities", default=None,
+                    help="comma-separated sparsity grid, e.g. 0.0,0.5,0.9 "
+                         "(overrides --smoke)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write rows as JSON instead of CSV on stdout")
+    args = ap.parse_args()
+    grid = (_parse_sparsities(args.sparsities) if args.sparsities
+            else (SMOKE_GRID if args.smoke else None))
+    rows = run(sparsities=grid)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows_to_json(rows), f, indent=2)
+        print(f"[fig5a] wrote {args.json}")
+    else:
+        for r in rows:
+            print(",".join(str(x) for x in r))
+
+
 if __name__ == "__main__":
-    for r in run():
-        print(",".join(str(x) for x in r))
+    main()

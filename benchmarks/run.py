@@ -1,13 +1,20 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows. ``--fast`` shrinks QAT
-step counts for CI-speed runs.
+step counts for CI-speed runs; ``--smoke`` additionally shrinks the
+fig5a sparsity grid and implies ``--fast``. ``--sparsities`` forwards a
+custom grid to the fig5a sweep (modules that take no such knob are
+called without it). ``--json PATH`` writes the rows as valid JSON in
+addition to the CSV on stdout.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig6]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--smoke] \
+        [--only fig6] [--sparsities 0.0,0.5,0.9] [--json OUT.json]
 """
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
 import sys
 import time
 
@@ -27,10 +34,29 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: implies --fast and shrinks the fig5a "
+                         "sparsity grid to its three-point smoke grid")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--sparsities", default=None,
+                    help="comma-separated sparsity grid forwarded to the "
+                         "fig5a sweep, e.g. 0.0,0.5,0.9")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as JSON to PATH")
     args = ap.parse_args()
 
+    sparsities = None
+    if args.sparsities:
+        sparsities = [float(v) for v in args.sparsities.split(",")
+                      if v.strip()]
+    elif args.smoke:
+        from benchmarks.fig5a_sparsity import SMOKE_GRID
+
+        sparsities = list(SMOKE_GRID)
+    fast = args.fast or args.smoke
+
     print("name,us_per_call,derived")
+    all_rows = []
     failed = []
     for mod_name in MODULES:
         if args.only and args.only not in mod_name:
@@ -38,13 +64,26 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
-            rows = mod.run(fast=args.fast)
+            kw = {"fast": fast}
+            # forward the sweep grid only to modules whose run() takes it
+            if (sparsities is not None
+                    and "sparsities" in inspect.signature(mod.run).parameters):
+                kw["sparsities"] = sparsities
+            rows = mod.run(**kw)
             for name, us, derived in rows:
                 print(f"{name},{us:.1f},{derived}", flush=True)
+                all_rows.append(
+                    {"name": name, "us_per_call": us, "derived": derived}
+                )
         except Exception as e:
             failed.append((mod_name, repr(e)))
             print(f"{mod_name},-1,ERROR:{e!r}", flush=True)
         sys.stderr.write(f"[bench] {mod_name}: {time.time() - t0:.1f}s\n")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": all_rows,
+                       "failed": [list(x) for x in failed]}, f, indent=2)
+        sys.stderr.write(f"[bench] wrote {args.json}\n")
     if failed:
         raise SystemExit(f"benchmarks failed: {failed}")
 

@@ -31,6 +31,14 @@ state prefills only the unique tails. Records true prefill tokens,
 cached prefix tokens, the prefill-token reduction and the tokens/s
 speedup (docs/memory.md). ``--paged`` runs only this section.
 
+Every per-mode entry reports the engine's modeled hwmodel energy
+attribution (``energy_pj``, ``energy_pj_per_request``, ``edap``,
+``mean_occupancy`` — docs/energy.md). The ``--energy`` section serves
+one psq-packed trace and sweeps ``energy_report`` across accounting
+styles (adc / quarry / hcim) x an occupancy grid without re-serving,
+recording the modeled hcim-vs-adc reduction; CI archives it as
+``BENCH_serve_energy.json``.
+
 ``--devices N`` additionally sweeps tensor-parallel mesh sizes: N CPU
 virtual devices are forged (``--xla_force_host_platform_device_count``,
 so the flag must come before any other JAX use in the process) and the
@@ -133,6 +141,14 @@ def bench_mode(mode: str, params, cfg, trace, slots: int,
         "prefill_tokens": sched["prefill_tokens"],
         "cached_prefix_tokens": sched["cached_prefix_tokens"],
         "mean_slot_occupancy": sched["mean_slot_occupancy"],
+        # modeled hwmodel energy attribution (docs/energy.md): every
+        # entry carries its style, total/per-request pJ, EDAP and the
+        # measured ternary column occupancy of the served weights
+        "energy_style": sched["energy_style"],
+        "energy_pj": sched["energy_pj_total"],
+        "energy_pj_per_request": sched["energy_pj_per_request"],
+        "edap": sched["edap_total"],
+        "mean_occupancy": sched["mean_occupancy"],
     }
     if "paged" in sched:
         out["paged"] = sched["paged"]
@@ -257,7 +273,74 @@ def bench_device_loop(params, cfg, trace, slots: int, max_len: int) -> Dict:
     return out
 
 
+def bench_energy(args) -> Dict:
+    """Modeled energy/EDAP section (``BENCH_serve_energy.json``).
+
+    Serves one mixed-length trace from the psq-packed engine, then —
+    without re-serving — sweeps ``eng.energy_report`` across accounting
+    styles (adc / quarry / hcim) and an occupancy grid. The measured
+    entry uses the pack-time ternary column occupancy of the served
+    weights; the sweep entries override occupancy to show how the
+    modeled hcim-vs-adc reduction scales with sparsity (docs/energy.md).
+    """
+    cfg = get_config(args.arch).reduced()
+    qcfg = dataclasses.replace(PSQ_TERNARY, kernel_backend="reference",
+                               xbar_rows=64)
+    cfg = cfg.with_quant(qcfg)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    cache = PackedModelCache()
+    params = pack_tree_psq(params, qcfg, cache)
+
+    if args.smoke:
+        n_req, prompt_rng, new_rng, slots, max_len = 6, (4, 12), (2, 4), 3, 32
+    else:
+        n_req, prompt_rng, new_rng = args.requests, (8, 64), (4, 32)
+        slots, max_len = args.slots, 128
+    trace = make_trace(n_req, prompt_rng, new_rng, cfg.vocab_size)
+
+    eng = ServeEngine(params, cfg,
+                      EngineConfig(max_batch=slots, max_len=max_len,
+                                   mode="continuous"))
+    for prompt, mnew in trace:
+        eng.submit(prompt, max_new_tokens=mnew)
+    eng.run()
+    sched = eng.stats()
+
+    out: Dict = {
+        "requests": n_req, "slots": slots, "max_len": max_len,
+        "energy_tokens": sched["energy_tokens"],
+        "measured_occupancy": sched["mean_occupancy"],
+        "measured": eng.energy_report(),
+        "sweep": {},
+    }
+    for sp in (0.0, 0.25, 0.5, 0.75, 0.9):
+        rep = eng.energy_report(occupancy=sp)
+        rep["hcim_vs_adc_reduction"] = 1.0 - (
+            rep["hcim"]["energy_pj_total"]
+            / max(rep["adc"]["energy_pj_total"], 1e-12)
+        )
+        out["sweep"][f"{sp:.2f}"] = rep
+        print(f"[serve_bench] energy occ={sp:.2f}: "
+              + "  ".join(f"{s} {rep[s]['energy_pj_total']:12.1f} pJ"
+                          for s in ("adc", "quarry", "hcim"))
+              + f"  hcim/adc -{rep['hcim_vs_adc_reduction'] * 100:.1f}%")
+    out["hcim_vs_adc_reduction_at_0.5"] = (
+        out["sweep"]["0.50"]["hcim_vs_adc_reduction"]
+    )
+    print(f"[serve_bench] modeled hcim vs adc at occupancy 0.5: "
+          f"{out['hcim_vs_adc_reduction_at_0.5'] * 100:.1f}% less energy "
+          f"over {out['energy_tokens']} served tokens")
+    return out
+
+
 def run(args) -> Dict:
+    if args.energy:
+        return {
+            "bench": "serve_energy",
+            "arch": args.arch,
+            "platform": jax.default_backend(),
+            "energy": bench_energy(args),
+        }
     cfg = get_config(args.arch).reduced()
     if not args.recurrent:
         # the recurrent section builds its own zamba2/xlstm models —
@@ -414,6 +497,10 @@ def main() -> None:
     ap.add_argument("--device-loop", action="store_true",
                     help="run only the device-loop horizon sweep "
                          "(decode_horizon 1/8/32)")
+    ap.add_argument("--energy", action="store_true",
+                    help="run only the modeled energy/EDAP section: "
+                         "styles x occupancy-grid sweep on one "
+                         "psq-packed engine run (BENCH_serve_energy.json)")
     ap.add_argument("--devices", type=int, default=0,
                     help="CPU virtual devices for the tensor-parallel mesh "
                          "sweep (must be the first JAX use in the process)")

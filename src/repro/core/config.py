@@ -44,6 +44,10 @@ class QuantConfig:
     # implies the kernel path (see ``kernel_path``).
     kernel_backend: Optional[str] = None
     fuse_planes: bool = False               # single-MXU-pass bit-plane fusion
+    # skip all-zero ternary column blocks using pack-time occupancy
+    # metadata (bit-exact; serving path only — QAT re-derives weights per
+    # call and has no static metadata to skip with)
+    sparsity_skip: bool = True
 
     def __post_init__(self):
         assert self.mode in ("none", "psq", "adc"), self.mode

@@ -116,6 +116,13 @@ def serve_linear_tp(
 
     Falls back to the unsharded forward when the column count does not
     divide the axis (the divisibility story of the rules table).
+
+    Sparsity skipping is disabled per shard: the replicated occupancy
+    metadata describes the GLOBAL column space, so each shard's local
+    ``(K, O/n)`` problem fails the metadata shape guard
+    (:func:`repro.kernels.occupancy.occupancy_for_kernel`) and runs
+    dense — correct by construction; per-shard metadata re-slicing is a
+    follow-up.
     """
     n = mesh.shape[axis]
     o = layer.w_codes.shape[-1]

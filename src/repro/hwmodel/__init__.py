@@ -8,6 +8,7 @@ from repro.hwmodel.dcim import (
     dcim_column_energy_pj, dcim_latency_ns, dcim_latency_per_column_ns,
 )
 from repro.hwmodel.system import (
-    LayerShape, SystemConfig, Tally, evaluate_layer, evaluate_workload,
+    LayerShape, SERVE_STYLES, SystemConfig, Tally, evaluate_layer,
+    evaluate_workload, serve_energy,
 )
 from repro.hwmodel.workloads import WORKLOADS

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Mapping, Optional, Sequence, Union
 
 from repro.hwmodel import dcim as dcim_mod
 from repro.hwmodel.devices import (
@@ -212,3 +212,97 @@ def evaluate_workload(
         total.latency_ns += t.latency_ns       # layers run sequentially
         total.area_mm2 += t.area_mm2           # all layers resident (PUMA)
     return total
+
+
+SERVE_STYLES = ("adc", "quarry", "hcim")
+
+
+def _occupancy_fraction(v) -> float:
+    # accepts a plain float or anything exposing ``mean_zero_fraction``
+    # (e.g. repro.kernels.occupancy.ColumnOccupancy)
+    return float(getattr(v, "mean_zero_fraction", v))
+
+
+def serve_energy(
+    layer_shapes: Sequence,
+    occupancy: Union[None, float, Mapping[str, object]] = None,
+    style: str = "hcim",
+    *,
+    xbar_rows: int = 128,
+    n_bits_a: int = 4,
+    n_bits_w: int = 4,
+    n_bits_sf: int = 4,
+    adc_bits: int = 7,
+    levels: str = "ternary",
+    hw: HwParams = DEFAULT_HW,
+    tech_scale: bool = False,
+) -> Dict[str, object]:
+    """Serving-stack entry point: modeled energy/EDAP for a set of MVMs.
+
+    The thin adapter :mod:`repro.serve.engine` and the benches call to
+    attribute modeled hardware cost to served tokens. ``layer_shapes``
+    are :class:`LayerShape` instances or ``(name, k, o, n_vec)`` tuples
+    (``n_vec = 1`` models one decode token; every energy term is linear
+    in ``n_vec``, so callers scale per-token results by served tokens).
+
+    ``occupancy`` is the ternary zero fraction the model *measured* —
+    a scalar applied to every layer, a ``{name: fraction}`` mapping
+    (missing names fall back to 0.0, i.e. no sparsity credit), or
+    ``None`` for 0.0. Values may be plain floats or objects exposing
+    ``mean_zero_fraction`` (pack-time
+    :class:`repro.kernels.occupancy.ColumnOccupancy` metadata).
+
+    Delegates to :func:`evaluate_workload`, so it agrees with the
+    :class:`Tally` path by construction.
+
+    >>> shapes = [("fc", 256, 128, 1)]
+    >>> e = serve_energy(shapes, occupancy=0.5, style="hcim")
+    >>> sorted(e)
+    ['area_mm2', 'breakdown', 'edap', 'energy_pj', 'latency_ns', 'occupancy', 'style']
+    >>> e["energy_pj"] < serve_energy(shapes, occupancy=0.5, style="adc")["energy_pj"]
+    True
+    >>> (serve_energy(shapes, occupancy=0.9)["energy_pj"]
+    ...  <= serve_energy(shapes, occupancy=0.1)["energy_pj"])
+    True
+    >>> serve_energy(shapes, style="dram")
+    Traceback (most recent call last):
+        ...
+    ValueError: unknown energy style 'dram'; choose from ('adc', 'quarry', 'hcim')
+    """
+    if style not in SERVE_STYLES:
+        raise ValueError(f"unknown energy style {style!r}; "
+                         f"choose from {SERVE_STYLES}")
+    layers = [
+        ls if isinstance(ls, LayerShape) else LayerShape(*ls)
+        for ls in layer_shapes
+    ]
+    if occupancy is None:
+        base_sp, layer_sp = 0.0, None
+    elif isinstance(occupancy, Mapping):
+        base_sp = 0.0
+        layer_sp = {name: _occupancy_fraction(v)
+                    for name, v in occupancy.items()}
+    else:
+        base_sp, layer_sp = _occupancy_fraction(occupancy), None
+    cfg = SystemConfig(
+        style=style, xbar_rows=xbar_rows, n_bits_a=n_bits_a,
+        n_bits_w=n_bits_w, n_bits_sf=n_bits_sf, adc_bits=adc_bits,
+        levels=levels, sparsity=base_sp, tech_scale=tech_scale,
+    )
+    tally = evaluate_workload(layers, cfg, hw, layer_sparsity=layer_sp)
+    mean_occ = base_sp
+    if layer_sp is not None and layers:
+        weights = [math.ceil(l.k / xbar_rows) * l.o * l.n_vec for l in layers]
+        occs = [layer_sp.get(l.name, 0.0) for l in layers]
+        wsum = sum(weights)
+        mean_occ = (sum(o * w for o, w in zip(occs, weights)) / wsum
+                    if wsum else 0.0)
+    return {
+        "style": style,
+        "occupancy": mean_occ,
+        "energy_pj": tally.energy_pj,
+        "latency_ns": tally.latency_ns,
+        "area_mm2": tally.area_mm2,
+        "edap": tally.edap,
+        "breakdown": dict(tally.breakdown),
+    }

@@ -36,13 +36,17 @@ def kernel_forward_values(
     alpha: jax.Array,
     step_x: jax.Array,
     cfg: QuantConfig,
+    occupancy=None,
 ) -> jax.Array:
     """Values-only HCiM forward from pre-derived weight-side state.
 
     The single activation-quantize -> backend -> rescale path shared by
     the per-call QAT wrapper below and the pack-once serving cache
     (:class:`repro.serve.cache.PackedLayer`) — one definition, so the two
-    paths cannot drift apart.
+    paths cannot drift apart. ``occupancy`` is optional pack-time
+    sparsity metadata (:mod:`repro.kernels.occupancy`): passed through to
+    the backend only when present, so third-party backends registered
+    against the pre-sparsity contract keep working on the dense path.
     """
     spec = cfg.spec
     backend = registry.resolve_backend(cfg)
@@ -50,12 +54,13 @@ def kernel_forward_values(
     xf = x.reshape(-1, x.shape[-1])
     x_int, s_x = quant.lsq_quantize_int(xf, step_x, spec.a_qn, spec.a_qp)
     x_int, s_x = sg(x_int), sg(s_x)
+    extra = {"occupancy": occupancy} if occupancy is not None else {}
     y_int = backend.psq_matmul(
         x_int.astype(jnp.float32), w_int, sf_q, sg(alpha),
         n_a=spec.n_bits_a, n_w=spec.n_bits_w,
         levels=cfg.psq_levels if cfg.mode == "psq" else "adc",
         adc_bits=cfg.adc_bits, xbar_rows=cfg.xbar_rows,
-        fuse_planes=cfg.fuse_planes,
+        fuse_planes=cfg.fuse_planes, **extra,
     )
     y = y_int * s_x * jnp.reshape(s_w, (1, -1) if jnp.ndim(s_w) else ())
     return y.reshape(orig_shape[:-1] + (w_int.shape[-1],))

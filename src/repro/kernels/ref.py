@@ -7,11 +7,14 @@ their own materialized reference there.
 from __future__ import annotations
 
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.quant import bit_weights
+from repro.kernels.occupancy import ColumnOccupancy, occupancy_for_kernel
 
 
 def psq_matmul_ref(
@@ -25,8 +28,18 @@ def psq_matmul_ref(
     levels: str,
     adc_bits: int = 7,
     xbar_rows: int = 128,
+    occupancy: Optional[ColumnOccupancy] = None,
 ) -> jax.Array:
-    """Oracle for :func:`repro.kernels.psq_matmul.psq_matmul_kernel`."""
+    """Oracle for :func:`repro.kernels.psq_matmul.psq_matmul_kernel`.
+
+    ``occupancy`` (pack-time metadata, see :mod:`repro.kernels.occupancy`)
+    enables the sparsity-skipping path: partial sums are only computed for
+    (tile, column-block) pairs whose weight slab is not all-zero. Skipped
+    pairs keep their exact value — ``ps = 0`` by construction — so the
+    result is bit-identical to the dense path (partial sums of {0,1}
+    products are exact integers in f32; no rounding depends on the
+    evaluation order).
+    """
     b, k = x_int.shape
     o = w_int.shape[1]
     r = xbar_rows
@@ -43,8 +56,27 @@ def psq_matmul_ref(
     wbits = jnp.stack(
         [jnp.mod(jnp.floor(u_w / 2.0 ** kk), 2.0) for kk in range(n_w)]
     )  # (n_w, T, R, O)
-    ps = jnp.einsum("jbtr,ktro->jkbto", xbits, wbits,
-                    precision=jax.lax.Precision.HIGHEST)
+    occ = occupancy_for_kernel(occupancy, o, k, xbar_rows)
+    if occ is None:
+        ps = jnp.einsum("jbtr,ktro->jkbto", xbits, wbits,
+                        precision=jax.lax.Precision.HIGHEST)
+    else:
+        # sparsity skip: scatter per-tile partial sums over the NON-zero
+        # columns only; all-zero columns keep the exact ps = 0 they would
+        # have computed. The metadata is static (host numpy), so column
+        # index sets are compile-time constants under jit.
+        zb = occ.zero_blocks_np()
+        col_block = np.arange(o) // occ.block
+        ps = jnp.zeros((n_a, n_w, b, t, o), jnp.float32)
+        for ti in range(t):
+            cols = np.nonzero(~zb[ti][col_block])[0]
+            if cols.size == 0:
+                continue
+            ps_t = jnp.einsum(
+                "jbr,kro->jkbo", xbits[:, :, ti, :], wbits[:, ti, :, :][..., cols],
+                precision=jax.lax.Precision.HIGHEST,
+            )
+            ps = ps.at[:, :, :, ti, cols].set(ps_t)
     sigma = bit_weights(n_a)
     kappa = bit_weights(n_w)
 

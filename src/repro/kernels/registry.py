@@ -21,7 +21,8 @@ Built-in backends:
 Backends expose three entry points with fixed signatures:
 
   psq_matmul(x_int, w_int, sf_q, alpha, *, n_a, n_w, levels, adc_bits,
-             xbar_rows, fuse_planes=False) -> y_int        (B, O)
+             xbar_rows, fuse_planes=False,
+             occupancy=None) -> y_int                      (B, O)
   int4_matmul(x, w_packed, scale) -> y                     (B, O)
   paged_attention(q, k_pool, v_pool, block_tables, lengths,
                   k_new, v_new) -> ctx                     (B, H, D)
@@ -29,7 +30,10 @@ Backends expose three entry points with fixed signatures:
 ``x_int``/``w_int`` are integer-valued f32 codes, ``sf_q`` the
 dequantized fixed-point scale factors broadcastable to
 ``(T, n_a, n_w, O)`` — exactly the contract of
-:func:`repro.kernels.ref.psq_matmul_ref`. ``paged_attention`` is the
+:func:`repro.kernels.ref.psq_matmul_ref`. ``occupancy`` is optional
+pack-time sparsity metadata (:mod:`repro.kernels.occupancy`); backends
+may skip all-zero ternary column blocks with it, but must stay
+bit-exact against the reference oracle whether or not they do. ``paged_attention`` is the
 single-token decode attention over the paged KV pool (block-table
 indirection; contract in :mod:`repro.kernels.paged_attention`) — it is
 optional for third-party backends (``None`` means not implemented, and
@@ -256,7 +260,8 @@ def resolve_backend(cfg) -> KernelBackend:
 # ---------------------------------------------------------------------------
 
 def _reference_psq(x_int, w_int, sf_q, alpha, *, n_a, n_w, levels,
-                   adc_bits=7, xbar_rows=128, fuse_planes=False):
+                   adc_bits=7, xbar_rows=128, fuse_planes=False,
+                   occupancy=None):
     # fuse_planes is a Pallas MXU-occupancy knob; jnp semantics are
     # plane-order independent so the oracle accepts and ignores it.
     del fuse_planes
@@ -266,6 +271,7 @@ def _reference_psq(x_int, w_int, sf_q, alpha, *, n_a, n_w, levels,
         x_int, w_int, sf_q, alpha,
         n_a=n_a, n_w=n_w, levels=levels,
         adc_bits=adc_bits, xbar_rows=xbar_rows,
+        occupancy=occupancy,
     )
 
 
@@ -277,14 +283,15 @@ def _reference_int4(x, w_packed, scale):
 
 def _pallas_psq(interpret: bool):
     def call(x_int, w_int, sf_q, alpha, *, n_a, n_w, levels,
-             adc_bits=7, xbar_rows=128, fuse_planes=False):
+             adc_bits=7, xbar_rows=128, fuse_planes=False,
+             occupancy=None):
         from repro.kernels.psq_matmul import psq_matmul_kernel
 
         return psq_matmul_kernel(
             x_int, w_int, sf_q, alpha,
             n_a=n_a, n_w=n_w, levels=levels, adc_bits=adc_bits,
             xbar_rows=xbar_rows, fuse_planes=fuse_planes,
-            interpret=interpret,
+            occupancy=occupancy, interpret=interpret,
         )
 
     return call

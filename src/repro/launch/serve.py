@@ -68,6 +68,11 @@ def _parse_args():
     ap.add_argument("--no-prefix-reuse", action="store_true",
                     help="keep the paged layout but disable the "
                          "shared-prefix radix index")
+    ap.add_argument("--energy-style", default="hcim",
+                    choices=["adc", "quarry", "hcim"],
+                    help="hwmodel accounting style for the per-request "
+                         "energy/EDAP attribution in stats() "
+                         "(docs/energy.md)")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
                     help="mesh axis sizes, e.g. 1,4 (model-parallel PSQ "
                          "columns) or 2,2; needs DATA*MODEL devices "
@@ -142,7 +147,8 @@ def main():
                      temperature=args.temperature, mode=args.mode,
                      decode_horizon=args.decode_horizon,
                      paged=args.paged, block_size=args.block_size,
-                     prefix_reuse=not args.no_prefix_reuse),
+                     prefix_reuse=not args.no_prefix_reuse,
+                     energy_style=args.energy_style),
         extra_inputs=extra,
         mesh=mesh,
     )
@@ -151,9 +157,15 @@ def main():
                    max_new_tokens=args.max_new_tokens)
     done = eng.run()
     stats = throughput_stats(done)
+    sched = eng.stats()
     fmt = "psq-packed" if args.psq_packed else ("int4" if args.int4 else "fp")
-    print(f"[serve] {args.arch} weights={fmt} scheduler={eng.stats()}")
+    print(f"[serve] {args.arch} weights={fmt} scheduler={sched}")
     print(f"[serve] {args.arch} weights={fmt}: {stats}")
+    print(f"[serve] {args.arch} energy[{sched['energy_style']}]: "
+          f"{sched['energy_pj_total']:.1f} pJ total, "
+          f"{sched['energy_pj_per_request']:.1f} pJ/request, "
+          f"edap {sched['edap_total']:.3g}, "
+          f"mean occupancy {sched['mean_occupancy']:.3f}")
 
 
 if __name__ == "__main__":

@@ -201,6 +201,11 @@ def packed_layer_pspecs(layer: Any, rules: Optional[Dict[str, MeshAxes]] = None,
         kappa=spec(layer.kappa, (None,)),
         w_packed=spec(layer.w_packed, (None, col)),
         bias=spec(layer.bias, (col,)),
+        # occupancy is pytree AUX data, not a leaf: the spec tree must
+        # carry the identical value or tree.map(layer, specs) rejects the
+        # structure mismatch. (Each TP shard still runs dense — the global
+        # metadata fails the per-shard shape guard by design.)
+        occupancy=getattr(layer, "occupancy", None),
     )
 
 

@@ -24,6 +24,13 @@ Packed per layer (values only, gradients stopped):
   sigma     f32 (n_a,)       input bit-stream significances
   kappa     f32 (n_w,)       weight bit-slice significances
   bias      f32 (O,) | None
+  occupancy ColumnOccupancy | None — static per-(tile, column-block)
+            zero-weight metadata (:mod:`repro.kernels.occupancy`), the
+            handle the kernels use to skip all-zero ternary column
+            blocks. Plain hashable python data, carried as pytree *aux*
+            (not a leaf), so it survives jit, device placement and mesh
+            re-placement untouched. ``None`` for scan-stacked packs
+            (weights are traced under vmap — no static codes to inspect).
 
 Example — pack a tiny layer once and serve from the cached state:
 
@@ -48,11 +55,15 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import psq, quant
 from repro.core.config import QuantConfig
 from repro.kernels import registry
 from repro.kernels.int4_matmul import pack_int4
+from repro.kernels.occupancy import (
+    ColumnOccupancy, column_occupancy, merge_occupancies,
+)
 
 sg = jax.lax.stop_gradient
 
@@ -75,6 +86,7 @@ class PackedLayer:
     kappa: jax.Array
     w_packed: Optional[jax.Array] = None
     bias: Optional[jax.Array] = None
+    occupancy: Optional[ColumnOccupancy] = None
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -90,6 +102,17 @@ class PackedLayer:
         w_packed = None
         if spec.n_bits_w <= 4 and w.shape[0] % 2 == 0:
             w_packed = pack_int4(w_int)
+        occupancy = None
+        try:
+            # concrete 2-D codes only; under vmap (scan-stacked packs) the
+            # tracer->numpy conversion raises and we pack dense metadata-less
+            w_np = np.asarray(w_int)
+        except Exception:
+            w_np = None
+        if w_np is not None and w_np.ndim == 2:
+            occupancy = column_occupancy(
+                w_np, xbar_rows=cfg.xbar_rows, n_w=spec.n_bits_w
+            )
         return cls(
             cfg=cfg,
             w_codes=w_int.astype(jnp.int8),
@@ -101,6 +124,7 @@ class PackedLayer:
             kappa=quant.bit_weights(spec.n_bits_w),
             w_packed=w_packed,
             bias=params.get("b"),
+            occupancy=occupancy,
         )
 
     # -- serving forward ----------------------------------------------------
@@ -112,9 +136,10 @@ class PackedLayer:
         """
         from repro.kernels.ops import kernel_forward_values
 
+        occ = self.occupancy if self.cfg.sparsity_skip else None
         y = kernel_forward_values(
             x, self.w_codes.astype(jnp.float32), self.s_w, self.sf_q,
-            self.alpha, self.step_x, self.cfg,
+            self.alpha, self.step_x, self.cfg, occupancy=occ,
         )
         if self.bias is not None:
             y = y + self.bias.astype(y.dtype)
@@ -144,11 +169,12 @@ class PackedLayer:
 def _packed_flatten(p: PackedLayer):
     children = (p.w_codes, p.s_w, p.sf_q, p.alpha, p.step_x,
                 p.sigma, p.kappa, p.w_packed, p.bias)
-    return children, p.cfg
+    return children, (p.cfg, p.occupancy)
 
 
-def _packed_unflatten(cfg: QuantConfig, children) -> PackedLayer:
-    return PackedLayer(cfg, *children)
+def _packed_unflatten(aux, children) -> PackedLayer:
+    cfg, occupancy = aux
+    return PackedLayer(cfg, *children, occupancy=occupancy)
 
 
 jax.tree_util.register_pytree_node(
@@ -175,7 +201,17 @@ def _pack_node(params: Dict[str, jax.Array], cfg: QuantConfig) -> PackedLayer:
     # stacked blocks: vmap the per-layer pack over the leading layer axis
     # (out_axes=0 broadcasts the layer-invariant sigma/kappa constants, so
     # every PackedLayer leaf keeps the axis lax.scan slices over).
-    return jax.vmap(lambda p: PackedLayer.pack(p, cfg))(params)
+    stacked = jax.vmap(lambda p: PackedLayer.pack(p, cfg))(params)
+    # occupancy can't be derived under vmap (tracers), but the stacked
+    # codes are concrete here: one conservative metadata object shared by
+    # every scan slice — a block skips only if zero in ALL layers
+    codes = np.asarray(stacked.w_codes)
+    merged = merge_occupancies([
+        column_occupancy(codes[i], xbar_rows=cfg.xbar_rows,
+                         n_w=cfg.spec.n_bits_w)
+        for i in range(codes.shape[0])
+    ])
+    return dataclasses.replace(stacked, occupancy=merged)
 
 
 def _weight_fingerprint(params: Dict[str, jax.Array], cfg: QuantConfig):

@@ -136,6 +136,9 @@ class EngineConfig:
     num_blocks: int = 0           # pool pages; 0 => auto (2x slot capacity)
     prefix_reuse: bool = True     # radix-index shared-prefix reuse
     paged_attn_backend: Optional[str] = None  # None => inline gather path
+    # hwmodel accounting style for stats()["energy_pj_total"] etc.
+    # (repro.hwmodel.system.serve_energy): adc | quarry | hcim
+    energy_style: str = "hcim"
 
 
 def _next_pow2(n: int) -> int:
@@ -143,6 +146,51 @@ def _next_pow2(n: int) -> int:
     while p < n:
         p *= 2
     return p
+
+
+def _collect_mvm_layers(node, path: str = "") -> List[tuple]:
+    """Walk a served param tree and list its MVM layers for the hwmodel.
+
+    Returns ``(name, k, o, occupancy_or_None, quant_cfg_or_None)`` per
+    linear — PackedLayer nodes carry their pack-time occupancy metadata
+    and QuantConfig; raw param dicts (fp / QAT trees, key ``"w"`` of rank
+    2 or 3) are modeled dense. Embedding tables (key ``"table"``) are
+    lookups, not MVMs, and are skipped. Stacked rank-3 weights count one
+    layer per leading index (scan-over-layers packs; MoE expert banks are
+    modeled as all-experts-resident, the PUMA weight-stationary story).
+    """
+    out: List[tuple] = []
+    if node is None:
+        return out
+    if hasattr(node, "w_codes"):             # PackedLayer (2-D or stacked)
+        w = node.w_codes
+        if w.ndim == 3:
+            for l in range(int(w.shape[0])):
+                out.append((f"{path}[{l}]", int(w.shape[1]),
+                            int(w.shape[2]), None, node.cfg))
+        else:
+            out.append((path, int(w.shape[0]), int(w.shape[1]),
+                        node.occupancy, node.cfg))
+        return out
+    if isinstance(node, dict):
+        w = node.get("w")
+        if getattr(w, "ndim", 0) in (2, 3) and "table" not in node:
+            if w.ndim == 3:
+                for l in range(int(w.shape[0])):
+                    out.append((f"{path}[{l}]", int(w.shape[1]),
+                                int(w.shape[2]), None, None))
+            else:
+                out.append((path, int(w.shape[0]), int(w.shape[1]),
+                            None, None))
+            return out
+        for k in sorted(node):
+            out.extend(_collect_mvm_layers(node[k], f"{path}/{k}"))
+        return out
+    if isinstance(node, (list, tuple)):
+        for i, v in enumerate(node):
+            out.extend(_collect_mvm_layers(v, f"{path}[{i}]"))
+        return out
+    return out
 
 
 class ServeEngine:
@@ -208,6 +256,24 @@ class ServeEngine:
         self.cached_prefix_tokens = 0    # prompt tokens served from pages
         self.step_occupancy: List[float] = []
         self.admissions: List[Dict[str, int]] = []   # {step, uid, slot}
+
+        # hwmodel-in-the-loop energy accounting: one pass over the served
+        # tree at construction collects every MVM shape + its pack-time
+        # occupancy metadata; per-token modeled cost is evaluated once
+        # (all hwmodel energy terms are linear in n_vec) and scaled by
+        # the true forward-pass token count at stats() time
+        from repro.hwmodel.system import SERVE_STYLES
+        if ecfg.energy_style not in SERVE_STYLES:
+            raise ValueError(
+                f"unknown energy_style {ecfg.energy_style!r}; "
+                f"choose from {SERVE_STYLES}"
+            )
+        self.energy_tokens = 0           # true tokens through the model
+        self._energy_shapes: List[tuple] = []
+        self._energy_occ: Dict[str, float] = {}
+        self._energy_kw: Dict[str, Any] = {}
+        self._energy_per_token: Optional[Dict[str, Any]] = None
+        self._init_energy_model()
 
         # paged KV layout: host-side pool/table/index bookkeeping plus a
         # PERSISTENT device page pool — prefix pages indexed in one run
@@ -422,10 +488,71 @@ class ServeEngine:
         self.prefill_calls = 0
         self.prefill_tokens = 0
         self.cached_prefix_tokens = 0
+        self.energy_tokens = 0
         self.step_occupancy = []
         self.admissions = []
         if self._mgr is not None:
             self._mgr.reset_counters()   # telemetry only; pages/index kept
+
+    def reset_counters(self) -> None:
+        """Alias for :meth:`reset_stats` — matches the paged-KV manager's
+        counter-reset naming so callers can treat engine and manager
+        telemetry uniformly."""
+        self.reset_stats()
+
+    def _init_energy_model(self) -> None:
+        from repro.hwmodel.system import serve_energy
+
+        mvms = _collect_mvm_layers(self.params)
+        if not mvms:
+            return
+        self._energy_shapes = [(name, k, o, 1) for name, k, o, _, _ in mvms]
+        self._energy_occ = {
+            name: (occ.mean_zero_fraction if occ is not None else 0.0)
+            for name, _, _, occ, _ in mvms
+        }
+        qcfg = next((c for _, _, _, _, c in mvms if c is not None), None)
+        if qcfg is not None:
+            self._energy_kw = dict(
+                xbar_rows=qcfg.xbar_rows,
+                n_bits_a=qcfg.spec.n_bits_a,
+                n_bits_w=qcfg.spec.n_bits_w,
+                n_bits_sf=qcfg.spec.n_bits_sf,
+                adc_bits=qcfg.adc_bits,
+                levels=qcfg.psq_levels,
+            )
+        self._energy_per_token = serve_energy(
+            self._energy_shapes, occupancy=self._energy_occ,
+            style=self.ecfg.energy_style, **self._energy_kw,
+        )
+
+    def energy_report(self, styles=None, occupancy=None) -> Dict[str, Dict]:
+        """Modeled per-style totals for the tokens served so far.
+
+        ``styles`` defaults to all of adc/quarry/hcim; ``occupancy``
+        overrides the measured pack-time occupancy (scalar or
+        ``{layer: fraction}``) for what-if sweeps — the serve_bench
+        energy section uses this to show the hcim-vs-adc reduction
+        across an occupancy grid without re-serving the trace.
+        """
+        from repro.hwmodel.system import SERVE_STYLES, serve_energy
+
+        if not self._energy_shapes:
+            return {}
+        occ = self._energy_occ if occupancy is None else occupancy
+        tok = self.energy_tokens
+        rep: Dict[str, Dict] = {}
+        for s in (styles or SERVE_STYLES):
+            e = serve_energy(self._energy_shapes, occupancy=occ, style=s,
+                             **self._energy_kw)
+            rep[s] = {
+                "energy_pj_per_token": e["energy_pj"],
+                "energy_pj_total": e["energy_pj"] * tok,
+                "edap_total": (e["energy_pj"] * tok) * (e["latency_ns"] * tok)
+                              * e["area_mm2"],
+                "occupancy": e["occupancy"],
+            }
+        return rep
 
     def stats(self) -> Dict[str, float]:
         occ = float(np.mean(self.step_occupancy)) if self.step_occupancy else 0.0
@@ -444,6 +571,22 @@ class ServeEngine:
             "mesh": (None if self.mesh is None else
                      "x".join(f"{k}={v}" for k, v in self.mesh.shape.items())),
         }
+        # hwmodel energy attribution (zeros before any token is served,
+        # and for trees with no MVM layers)
+        e = self._energy_per_token
+        tok = self.energy_tokens
+        total = e["energy_pj"] * tok if e is not None else 0.0
+        out.update({
+            "energy_style": self.ecfg.energy_style,
+            "energy_tokens": tok,
+            "energy_pj_per_token": e["energy_pj"] if e is not None else 0.0,
+            "energy_pj_total": total,
+            "energy_pj_per_request": (total / len(self.finished)
+                                      if self.finished else 0.0),
+            "edap_total": (total * (e["latency_ns"] * tok) * e["area_mm2"]
+                           if e is not None else 0.0),
+            "mean_occupancy": e["occupancy"] if e is not None else 0.0,
+        })
         if self._mgr is not None:
             out["paged"] = self._mgr.stats()
         return out
@@ -506,6 +649,7 @@ class ServeEngine:
             self.params, jnp.asarray(toks), jnp.asarray(lens))
         self.prefill_calls += 1
         self.prefill_tokens += sum(len(r.prompt) for r in take)
+        self.energy_tokens += sum(len(r.prompt) for r in take)
         # each row's next token comes from its true last prompt position
         idx = jnp.asarray([len(r.prompt) - 1 for r in take]
                           + [0] * (mp - m))
@@ -626,6 +770,7 @@ class ServeEngine:
         )
         self.prefill_calls += 1
         self.prefill_tokens += len(suffix)
+        self.energy_tokens += len(suffix)   # reused prefix costs nothing
         self.cached_prefix_tokens += cached
         cache = self._insert_paged(
             cache, src, 0, slot, jnp.asarray(self._mgr.tables[slot]),
@@ -689,6 +834,7 @@ class ServeEngine:
             self.params, jnp.asarray(toks), jnp.asarray(lens))
         self.prefill_calls += 1
         self.prefill_tokens += sum(len(r.prompt) for r, _, _ in placed)
+        self.energy_tokens += sum(len(r.prompt) for r, _, _ in placed)
         idx = jnp.asarray([len(r.prompt) - 1 for r, _, _ in placed]
                           + [0] * (mp - m))
         first = np.asarray(self._sample(logits[jnp.arange(mp), idx]))
@@ -834,6 +980,10 @@ class ServeEngine:
             if r is None:
                 continue
             r.output.extend(int(t) for t in buf[i, :emitted[i]])
+            # energy: only tokens a live slot actually emitted (retired
+            # rows keep stepping under the no-op mask — burned compute on
+            # the TPU, but no modeled crossbar work is attributed)
+            self.energy_tokens += int(emitted[i])
             last_tok[i] = int(last[i])
             if done[i]:
                 self._retire(r, now)
@@ -875,6 +1025,7 @@ class ServeEngine:
                 continue
             t = int(nxt[i])
             r.output.append(t)
+            self.energy_tokens += 1
             last_tok[i] = t
             if t == r.eos_id or len(r.output) >= r.max_new_tokens:
                 self._retire(r, now)
@@ -956,6 +1107,7 @@ class ServeEngine:
         logits, cache = self._prefill_full(self.params, b)
         self.prefill_calls += 1
         self.prefill_tokens += sum(len(r.prompt) for r in reqs)
+        self.energy_tokens += sum(len(r.prompt) for r in reqs)
         if recurrent:
             # each row's first token comes from its true last position
             nxt = self._sample(
@@ -996,6 +1148,7 @@ class ServeEngine:
                     continue
                 t = int(np.asarray(nxt)[i])
                 r.output.append(t)
+                self.energy_tokens += 1
                 if t == r.eos_id or len(r.output) >= r.max_new_tokens:
                     r.done, r.t_done = True, now
                 else:

@@ -185,3 +185,76 @@ class TestScaling:
         e20 = evaluate_workload(WORKLOADS["resnet20"](), SystemConfig(style="hcim"))
         e44 = evaluate_workload(WORKLOADS["resnet44"](), SystemConfig(style="hcim"))
         assert e44.energy_pj > 1.5 * e20.energy_pj
+
+
+class TestServeEnergy:
+    """serve_energy: the engine-facing wrapper over the Tally path."""
+
+    def _shapes(self):
+        return [(l.name, l.k, l.o, l.n_vec) for l in WORKLOADS["resnet20"]()]
+
+    def test_hcim_energy_monotone_nonincreasing_in_sparsity(self):
+        from repro.hwmodel import serve_energy
+
+        for r in (64, 128):
+            es = [
+                serve_energy(self._shapes(), occupancy=sp, style="hcim",
+                             xbar_rows=r)["energy_pj"]
+                for sp in (0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 1.0)
+            ]
+            assert all(a >= b - 1e-9 for a, b in zip(es, es[1:])), (r, es)
+
+    def test_style_ordering_hcim_quarry_adc(self):
+        """hcim <= quarry <= adc across the operating grid. Above
+        occupancy ~0.88 quarry undercuts hcim (its SF cost gates fully
+        with sparsity while hcim's DCiM keeps a fixed-cost floor), so
+        the grid stops at 0.75 — the crossover is documented in
+        docs/energy.md, not a modeling bug."""
+        from repro.hwmodel import serve_energy
+
+        for sp in (0.0, 0.25, 0.5, 0.75):
+            for r in (64, 128):
+                for lv in ("ternary", "binary"):
+                    e = {
+                        s: serve_energy(self._shapes(), occupancy=sp,
+                                        style=s, xbar_rows=r,
+                                        levels=lv)["energy_pj"]
+                        for s in ("hcim", "quarry", "adc")
+                    }
+                    assert e["hcim"] <= e["quarry"] <= e["adc"], (sp, r, lv, e)
+
+    def test_agrees_with_workload_tally(self):
+        """serve_energy must be evaluate_workload in a serving coat: same
+        energy, latency, area and EDAP on the fig5a/fig6 layer shapes."""
+        from repro.hwmodel import serve_energy
+
+        layers = WORKLOADS["resnet20"]()
+        for style, sp in (("hcim", 0.5), ("quarry", 0.25), ("adc", 0.0)):
+            t = evaluate_workload(
+                layers, SystemConfig(style=style, sparsity=sp)
+            )
+            e = serve_energy([(l.name, l.k, l.o, l.n_vec) for l in layers],
+                             occupancy=sp, style=style)
+            assert e["energy_pj"] == pytest.approx(t.energy_pj)
+            assert e["latency_ns"] == pytest.approx(t.latency_ns)
+            assert e["area_mm2"] == pytest.approx(t.area_mm2)
+            assert e["edap"] == pytest.approx(t.edap)
+            assert e["breakdown"] == t.breakdown
+
+    def test_per_layer_occupancy_map(self):
+        from repro.hwmodel import serve_energy
+
+        shapes = [("a", 128, 128, 1), ("b", 128, 128, 1)]
+        uniform = serve_energy(shapes, occupancy=0.5, style="hcim")
+        mapped = serve_energy(shapes, occupancy={"a": 0.5, "b": 0.5},
+                              style="hcim")
+        assert mapped["energy_pj"] == pytest.approx(uniform["energy_pj"])
+        # a missing name falls back to dense (0.0) -> more energy
+        partial = serve_energy(shapes, occupancy={"a": 0.5}, style="hcim")
+        assert partial["energy_pj"] > mapped["energy_pj"]
+
+    def test_unknown_style_raises(self):
+        from repro.hwmodel import serve_energy
+
+        with pytest.raises(ValueError, match="unknown energy style"):
+            serve_energy([("fc", 64, 64, 1)], style="dram")

@@ -430,3 +430,91 @@ class TestThroughputStats:
         assert s["total_tokens"] == 2
         assert s["mean_ttft_s"] == pytest.approx(0.5)
         assert np.isfinite(s["tokens_per_s"]) and s["tokens_per_s"] > 0
+
+
+class TestEnergyTelemetry:
+    """Modeled hwmodel energy attribution in stats() (docs/energy.md)."""
+
+    ENERGY_KEYS = ("energy_pj_per_token", "energy_pj_total",
+                   "energy_pj_per_request", "edap_total", "mean_occupancy")
+
+    def test_counters_finite_and_monotone_across_runs(self, tiny):
+        import math
+
+        cfg, params = tiny
+        eng = ServeEngine(params, cfg, EngineConfig(max_batch=2, max_len=64))
+        s0 = eng.stats()
+        assert s0["energy_tokens"] == 0
+        assert s0["energy_pj_total"] == 0.0 and s0["edap_total"] == 0.0
+
+        rng = np.random.RandomState(11)
+        eng.submit(rng.randint(0, cfg.vocab_size, size=6), max_new_tokens=4)
+        eng.run()
+        s1 = eng.stats()
+        assert s1["energy_tokens"] > 0
+        for k in self.ENERGY_KEYS:
+            assert math.isfinite(s1[k]), k
+        assert s1["energy_pj_per_token"] > 0.0
+        assert s1["energy_pj_total"] > 0.0
+        assert s1["energy_pj_per_request"] > 0.0
+        assert s1["edap_total"] > 0.0
+
+        eng.submit(rng.randint(0, cfg.vocab_size, size=5), max_new_tokens=3)
+        eng.run()
+        s2 = eng.stats()
+        assert s2["energy_tokens"] > s1["energy_tokens"]
+        assert s2["energy_pj_total"] > s1["energy_pj_total"]
+        # per-token cost is a property of the served model, not the trace
+        assert s2["energy_pj_per_token"] == s1["energy_pj_per_token"]
+
+    def test_reset_counters_zeroes_energy(self, tiny):
+        cfg, params = tiny
+        eng = ServeEngine(params, cfg, EngineConfig(max_batch=1, max_len=64))
+        eng.submit(np.arange(4) % cfg.vocab_size, max_new_tokens=3)
+        eng.run()
+        before = eng.stats()
+        assert before["energy_pj_total"] > 0.0
+        eng.reset_counters()
+        after = eng.stats()
+        assert after["energy_tokens"] == 0
+        assert after["energy_pj_total"] == 0.0
+        assert after["energy_pj_per_request"] == 0.0
+        assert after["edap_total"] == 0.0
+        # the per-token model survives the reset (engine state, not trace)
+        assert after["energy_pj_per_token"] == before["energy_pj_per_token"]
+
+    def test_never_started_engine_reports_zeros(self, tiny):
+        cfg, params = tiny
+        eng = ServeEngine(params, cfg, EngineConfig(max_batch=1, max_len=64))
+        s = eng.stats()
+        assert s["energy_tokens"] == 0
+        assert s["energy_pj_total"] == 0.0
+        assert s["energy_pj_per_request"] == 0.0
+        assert s["edap_total"] == 0.0
+
+    def test_zero_output_run_keeps_per_request_finite(self, tiny):
+        """run() with no submissions: no division by an empty finished
+        list, all totals stay zero."""
+        cfg, params = tiny
+        eng = ServeEngine(params, cfg, EngineConfig(max_batch=1, max_len=64))
+        assert eng.run() == []
+        s = eng.stats()
+        assert s["energy_pj_per_request"] == 0.0 and s["energy_tokens"] == 0
+
+    def test_energy_style_is_live(self, tiny):
+        cfg, params = tiny
+        pj = {}
+        for style in ("hcim", "adc"):
+            eng = ServeEngine(params, cfg,
+                              EngineConfig(max_batch=1, max_len=64,
+                                           energy_style=style))
+            assert eng.stats()["energy_style"] == style
+            pj[style] = eng.stats()["energy_pj_per_token"]
+        assert pj["adc"] > pj["hcim"]
+
+    def test_unknown_energy_style_raises(self, tiny):
+        cfg, params = tiny
+        with pytest.raises(ValueError, match="energy_style"):
+            ServeEngine(params, cfg,
+                        EngineConfig(max_batch=1, max_len=64,
+                                     energy_style="dram"))
