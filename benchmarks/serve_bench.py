@@ -31,6 +31,14 @@ state prefills only the unique tails. Records true prefill tokens,
 cached prefix tokens, the prefill-token reduction and the tokens/s
 speedup (docs/memory.md). ``--paged`` runs only this section.
 
+The ``moe`` section serves the reduced granite MoE config through the
+continuous slot pool single-device and — when ``--devices`` forges
+enough virtual devices — on a ``(1, 1, E)`` ("data", "model",
+"expert") mesh with the expert FFN stacks sharded over the ``expert``
+axis (router replicated, bit-exact dispatch; docs/parallelism.md),
+asserting token-identical greedy outputs. ``--moe`` runs only this
+section (``BENCH_serve_moe.json``).
+
 Every per-mode entry reports the engine's modeled hwmodel energy
 attribution (``energy_pj``, ``energy_pj_per_request``, ``edap``,
 ``mean_occupancy`` — docs/energy.md). The ``--energy`` section serves
@@ -333,6 +341,76 @@ def bench_energy(args) -> Dict:
     return out
 
 
+def bench_moe(args) -> Dict:
+    """Expert-parallel MoE serving section (``BENCH_serve_moe.json``).
+
+    Serves the reduced granite MoE config through the continuous slot
+    pool twice over the same mixed-length trace: single-device, then on
+    a ``(1, 1, E)`` ("data", "model", "expert") mesh with the expert
+    FFN stacks sharded over the ``expert`` axis (router replicated —
+    docs/parallelism.md). The dispatch reassembles the exact capacity
+    tensor the single-device scatter consumes, so greedy outputs are
+    bit-identical; the section records both throughputs and the
+    token-level match. With one device (or a non-divisible expert
+    count) only the single-device entry is emitted.
+    """
+    arch = "granite-moe-3b-a800m"
+    cfg = get_config(arch).reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    if args.smoke:
+        n_req, prompt_rng, new_rng, slots, max_len = 6, (4, 12), (2, 6), 3, 32
+    else:
+        n_req, prompt_rng, new_rng = args.requests, (8, 64), (4, 32)
+        slots, max_len = args.slots, 128
+    trace = make_trace(n_req, prompt_rng, new_rng, cfg.vocab_size)
+
+    def serve_tokens(mesh):
+        eng = ServeEngine(params, cfg,
+                          EngineConfig(max_batch=slots, max_len=max_len,
+                                       mode="continuous"),
+                          mesh=mesh)
+        for prompt, mnew in trace:
+            eng.submit(prompt, max_new_tokens=mnew)
+        done = eng.run()
+        return {r.uid: list(r.output) for r in done}
+
+    out: Dict = {
+        "arch": arch, "family": cfg.family, "n_experts": cfg.n_experts,
+        "moe_top_k": cfg.moe_top_k, "requests": n_req, "slots": slots,
+        "max_len": max_len,
+    }
+    out["single"] = bench_mode("continuous", params, cfg, trace, slots,
+                               max_len, repeats=3)
+    print(f"[serve_bench] moe single-device: "
+          f"{out['single']['tokens_per_s']:8.1f} tok/s  "
+          f"steps {out['single']['decode_steps']}")
+
+    e = 1
+    while e * 2 <= len(jax.devices()) and cfg.n_experts % (e * 2) == 0:
+        e *= 2
+    if e > 1:
+        mesh = jax.make_mesh((1, 1, e), ("data", "model", "expert"))
+        out["expert_parallel"] = dict(
+            mesh=f"data=1,model=1,expert={e}",
+            **bench_mode("continuous", params, cfg, trace, slots, max_len,
+                         mesh=mesh, repeats=3),
+        )
+        out["tokens_match"] = serve_tokens(None) == serve_tokens(mesh)
+        out["ep_vs_single_tokens_per_s"] = (
+            out["expert_parallel"]["tokens_per_s"]
+            / max(out["single"]["tokens_per_s"], 1e-9)
+        )
+        print(f"[serve_bench] moe expert={e}: "
+              f"{out['expert_parallel']['tokens_per_s']:8.1f} tok/s  "
+              f"tokens_match={out['tokens_match']}  "
+              f"({out['ep_vs_single_tokens_per_s']:.2f}x vs single; CPU "
+              f"measures dispatch overhead, not speedup)")
+        if not out["tokens_match"]:
+            raise SystemExit("[serve_bench] moe: expert-parallel greedy "
+                             "outputs diverged from single-device")
+    return out
+
+
 def run(args) -> Dict:
     if args.energy:
         return {
@@ -340,6 +418,13 @@ def run(args) -> Dict:
             "arch": args.arch,
             "platform": jax.default_backend(),
             "energy": bench_energy(args),
+        }
+    if args.moe:
+        return {
+            "bench": "serve_moe",
+            "platform": jax.default_backend(),
+            "devices": len(jax.devices()),
+            "moe": bench_moe(args),
         }
     cfg = get_config(args.arch).reduced()
     if not args.recurrent:
@@ -427,6 +512,12 @@ def run(args) -> Dict:
     if not args.paged and not args.device_loop:
         result["recurrent_continuous"] = bench_recurrent(args)
 
+    # tiny MoE entry in the default section: single-device continuous
+    # serve of the reduced granite MoE (the full expert-parallel
+    # comparison is the --moe section / BENCH_serve_moe.json)
+    if not only_section:
+        result["moe"] = bench_moe(args)
+
     if not only_section and args.devices > 1:
         result["sharded"] = run_sharded_sweep(args)
     return result
@@ -497,6 +588,11 @@ def main() -> None:
     ap.add_argument("--device-loop", action="store_true",
                     help="run only the device-loop horizon sweep "
                          "(decode_horizon 1/8/32)")
+    ap.add_argument("--moe", action="store_true",
+                    help="run only the MoE serving section: continuous "
+                         "granite-moe single-device vs expert-parallel "
+                         "(with --devices N) with a bit-exact token "
+                         "check (BENCH_serve_moe.json)")
     ap.add_argument("--energy", action="store_true",
                     help="run only the modeled energy/EDAP section: "
                          "styles x occupancy-grid sweep on one "

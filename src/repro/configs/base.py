@@ -54,6 +54,12 @@ class ArchConfig:
     remat: str = "none"            # none | block (activation checkpointing)
     attn_impl: str = "naive"       # naive | flash (chunked online softmax)
     compute_dtype: str = "f32"     # f32 | bf16 (activation/compute dtype)
+    # scan_layers=False unrolls every layer scan into an explicit Python
+    # loop over the same stacked params — the slow-compile reference the
+    # golden-parity suite pins the scan path against (bit-exact by
+    # construction: identical per-layer math, only the loop construct
+    # differs)
+    scan_layers: bool = True
 
     @property
     def resolved_head_dim(self) -> int:

@@ -18,14 +18,18 @@ steps into one on-device ``lax.while_loop`` per host round-trip
 Multi-device: ``--mesh 1,4`` runs the PSQ datapath tensor-parallel over
 a 4-way ``model`` axis (packed layers column-sharded, one psum per
 matmul) and ``--mesh 4,1`` shards the decode slot pool over ``data``.
-On CPU, ``--devices N`` forges N virtual devices (sets
+A third component adds an ``expert`` axis — ``--mesh 1,1,4`` serves MoE
+configs expert-parallel (expert FFN stacks sharded over experts, router
+replicated, bit-exact dispatch; see docs/parallelism.md). On CPU,
+``--devices N`` forges N virtual devices (sets
 ``--xla_force_host_platform_device_count`` — must run before any other
-JAX use in the process). See docs/parallelism.md.
+JAX use in the process).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import math
 
 
 def _parse_args():
@@ -73,9 +77,10 @@ def _parse_args():
                     help="hwmodel accounting style for the per-request "
                          "energy/EDAP attribution in stats() "
                          "(docs/energy.md)")
-    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL[,EXPERT]",
                     help="mesh axis sizes, e.g. 1,4 (model-parallel PSQ "
-                         "columns) or 2,2; needs DATA*MODEL devices "
+                         "columns), 2,2, or 1,1,4 (expert-parallel MoE "
+                         "serving); needs DATA*MODEL*EXPERT devices "
                          "(default: all devices data-parallel)")
     ap.add_argument("--devices", type=int, default=0,
                     help="CPU only: forge N virtual devices via XLA_FLAGS "
@@ -104,21 +109,33 @@ def main():
         throughput_stats,
     )
 
+    cfg = get_config(args.arch).reduced()
     if args.mesh:
-        d, m = (int(v) for v in args.mesh.split(","))
-        if d * m > len(jax.devices()):
+        sizes = tuple(int(v) for v in args.mesh.split(","))
+        if len(sizes) not in (2, 3):
             raise SystemExit(
-                f"--mesh {args.mesh} needs {d * m} devices, have "
-                f"{len(jax.devices())} (on CPU add --devices {d * m})"
+                f"--mesh takes DATA,MODEL or DATA,MODEL,EXPERT sizes, "
+                f"got {args.mesh!r}"
             )
-        mesh = jax.make_mesh((d, m), ("data", "model"))
+        axes = ("data", "model", "expert")[: len(sizes)]
+        n = math.prod(sizes)
+        if n > len(jax.devices()):
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {n} devices, have "
+                f"{len(jax.devices())} (on CPU add --devices {n})"
+            )
+        if len(sizes) == 3 and sizes[2] > 1 and cfg.family != "moe":
+            raise SystemExit(
+                f"--mesh {args.mesh}: an expert axis > 1 only applies to "
+                f"MoE archs; {args.arch} has no experts"
+            )
+        mesh = jax.make_mesh(sizes, axes)
     else:
         mesh = make_host_mesh()
     print(f"[serve] mesh: "
           f"{'x'.join(f'{k}={v}' for k, v in mesh.shape.items())}  "
           f"backends: {registry.describe()}")
 
-    cfg = get_config(args.arch).reduced()
     if args.psq_packed:
         backend = args.backend or (
             "reference" if jax.default_backend() == "cpu" else "pallas"

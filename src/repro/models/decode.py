@@ -53,6 +53,7 @@ from repro.models import xlstm as xlstm_mod
 from repro.models.transformer import (
     attn_config,
     encode,
+    layer_scan,
     ssm_config,
     stack_plan,
     xlstm_config,
@@ -399,8 +400,9 @@ def decode_step_paged(
             lp, x_, k_l, v_l, block_tables, length, cfg, paged_fn
         )
 
-    x, kv_upd = jax.lax.scan(
-        body, x, (params["blocks"], cache["kv"]["k"], cache["kv"]["v"])
+    x, kv_upd = layer_scan(
+        body, x, (params["blocks"], cache["kv"]["k"], cache["kv"]["v"]),
+        unroll=not cfg.scan_layers,
     )
     new_cache = {
         "kv": _commit_kv_paged(cache["kv"], kv_upd, length, block_tables,
@@ -522,8 +524,9 @@ def prefill_paged_suffix(
         x2 = _ffn_block(lp, x_ + h, cfg, q)
         return x2, (kh.astype(k_l.dtype), vh.astype(v_l.dtype))
 
-    x, (ks, vs) = jax.lax.scan(
-        body, x, (params["blocks"], cache["kv"]["k"], cache["kv"]["v"])
+    x, (ks, vs) = layer_scan(
+        body, x, (params["blocks"], cache["kv"]["k"], cache["kv"]["v"]),
+        unroll=not cfg.scan_layers,
     )
     x = L.apply_norm(cfg.norm_type, params["final_norm"], x)
     logits = L.apply_lm_head(params["embed"], x, params.get("lm_head"))
@@ -677,7 +680,7 @@ def decode_step(
             {"k": cache["kv"]["k"], "v": cache["kv"]["v"]},
             cache.get("cross", jnp.zeros((cfg.n_layers,))),
         )
-        x, kv_upd = jax.lax.scan(body, x, xs)
+        x, kv_upd = layer_scan(body, x, xs, unroll=not cfg.scan_layers)
         new_cache["kv"] = _commit_kv(cache["kv"], kv_upd, length,
                                      step_mask=step_mask)
         if has_cross:
@@ -705,16 +708,18 @@ def decode_step(
                     )
                     return xi + h, st
 
-                x_, st_new = jax.lax.scan(inner, x_, (gp, gc))
+                x_, st_new = layer_scan(inner, x_, (gp, gc),
+                                        unroll=not cfg.scan_layers)
                 x_, kv_out = _attn_decode_one(
                     None, x_, kv, length, cfg, params=params, shared=True
                 )
                 return x_, (st_new, kv_out)
 
-            x, (ssm_new, kv_upd) = jax.lax.scan(
+            x, (ssm_new, kv_upd) = layer_scan(
                 superstep, x,
                 (grouped_p, grouped_c,
                  {"k": cache["kv_shared"]["k"], "v": cache["kv_shared"]["v"]}),
+                unroll=not cfg.scan_layers,
             )
             ssm_flat = jax.tree.map(
                 lambda a: a.reshape(g * pg, *a.shape[2:]), ssm_new
@@ -739,8 +744,9 @@ def decode_step(
                 )
                 return x_ + h, st
 
-            x, tail_new = jax.lax.scan(
-                tail_body, x, (params["mamba_tail"], cache["ssm_tail"])
+            x, tail_new = layer_scan(
+                tail_body, x, (params["mamba_tail"], cache["ssm_tail"]),
+                unroll=not cfg.scan_layers,
             )
             if step_mask is not None:
                 tail_new = _select_slots(step_mask, tail_new,
@@ -770,7 +776,8 @@ def decode_step(
 
             def superstep(x_, xs):
                 gp, gc, sp, sc = xs
-                x_, ml_new = jax.lax.scan(ml_body, x_, (gp, gc))
+                x_, ml_new = layer_scan(ml_body, x_, (gp, gc),
+                                        unroll=not cfg.scan_layers)
                 h, s_new, _ = xlstm_mod.decode_slstm(
                     sp["slstm"],
                     L.apply_norm(cfg.norm_type, sp["norm1"], x_),
@@ -778,9 +785,10 @@ def decode_step(
                 )
                 return x_ + h, (ml_new, s_new)
 
-            x, (ml_new, sl_new) = jax.lax.scan(
+            x, (ml_new, sl_new) = layer_scan(
                 superstep, x,
                 (grouped_p, grouped_c, params["slstm_blocks"], cache["slstm"]),
+                unroll=not cfg.scan_layers,
             )
             ml_flat = jax.tree.map(
                 lambda a: a.reshape(g * pg, *a.shape[2:]), ml_new
@@ -797,8 +805,9 @@ def decode_step(
             new_cache["mlstm_groups"] = cache.get("mlstm_groups")
             new_cache["slstm"] = cache.get("slstm")
         if tail:
-            x, tail_new = jax.lax.scan(
-                ml_body, x, (params["mlstm_tail"], cache["mlstm_tail"])
+            x, tail_new = layer_scan(
+                ml_body, x, (params["mlstm_tail"], cache["mlstm_tail"]),
+                unroll=not cfg.scan_layers,
             )
             if step_mask is not None:
                 tail_new = _select_slots(step_mask, tail_new,
@@ -888,8 +897,9 @@ def prefill(
             )
             return x2, kv
 
-        x, (ks, vs) = jax.lax.scan(
-            body, x, (params["blocks"], jnp.zeros((cfg.n_layers,)))
+        x, (ks, vs) = layer_scan(
+            body, x, (params["blocks"], jnp.zeros((cfg.n_layers,))),
+            unroll=not cfg.scan_layers,
         )
         cache["kv"] = write_kv(cache["kv"], ks, vs)
     elif cfg.family == "hybrid":
@@ -909,17 +919,20 @@ def prefill(
             )
 
             def superstep(x_, gp):
-                x_, st = jax.lax.scan(mamba_one, x_, gp)
+                x_, st = layer_scan(mamba_one, x_, gp,
+                                    unroll=not cfg.scan_layers)
                 x_, kv = attn_prefill_one(None, x_, shared=True)
                 return x_, (st, kv)
 
-            x, (ssm_states, (ks, vs)) = jax.lax.scan(superstep, x, grouped_p)
+            x, (ssm_states, (ks, vs)) = layer_scan(
+                superstep, x, grouped_p, unroll=not cfg.scan_layers)
             cache["ssm_groups"] = _constrain_state(jax.tree.map(
                 lambda a: a.reshape(g * pg, *a.shape[2:]), ssm_states
             ))
             cache["kv_shared"] = write_kv(cache["kv_shared"], ks, vs)
         if tail:
-            x, tail_states = jax.lax.scan(mamba_one, x, params["mamba_tail"])
+            x, tail_states = layer_scan(mamba_one, x, params["mamba_tail"],
+                                        unroll=not cfg.scan_layers)
             cache["ssm_tail"] = _constrain_state(tail_states)
     elif cfg.family == "ssm":
         g, pg, tail = plan["groups"], plan["per_group"], plan["tail"]
@@ -939,22 +952,25 @@ def prefill(
 
             def superstep(x_, xs):
                 gp, sp = xs
-                x_, ml_st = jax.lax.scan(ml_one, x_, gp)
+                x_, ml_st = layer_scan(ml_one, x_, gp,
+                                       unroll=not cfg.scan_layers)
                 h, _, s_st = xlstm_mod.apply_slstm(
                     sp["slstm"], L.apply_norm(cfg.norm_type, sp["norm1"], x_),
                     xcfg, q, return_cache=True, lengths=lengths,
                 )
                 return x_ + h, (ml_st, s_st)
 
-            x, (ml_states, s_states) = jax.lax.scan(
-                superstep, x, (grouped_p, params["slstm_blocks"])
+            x, (ml_states, s_states) = layer_scan(
+                superstep, x, (grouped_p, params["slstm_blocks"]),
+                unroll=not cfg.scan_layers,
             )
             cache["mlstm_groups"] = _constrain_state(jax.tree.map(
                 lambda a: a.reshape(g * pg, *a.shape[2:]), ml_states
             ))
             cache["slstm"] = _constrain_state(s_states)
         if tail:
-            x, tail_states = jax.lax.scan(ml_one, x, params["mlstm_tail"])
+            x, tail_states = layer_scan(ml_one, x, params["mlstm_tail"],
+                                        unroll=not cfg.scan_layers)
             cache["mlstm_tail"] = _constrain_state(tail_states)
 
     x = L.apply_norm(cfg.norm_type, params["final_norm"], x)

@@ -21,10 +21,13 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.config import QuantConfig
 from repro.core import psq
 from repro.core.psq_linear import init_linear
+from repro.parallel import sharding as shd
 from repro.parallel.sharding import constrain
 
 Params = Dict
@@ -55,9 +58,15 @@ def init_moe(
 
 
 def _expert_ffn(
-    p: Params, xs: jax.Array, quant: QuantConfig, act: str
+    p: Params, xs: jax.Array, quant: QuantConfig, act: str,
+    constrained: bool = True,
 ) -> jax.Array:
-    """xs: (E, C, d) gathered tokens -> (E, C, d) expert outputs."""
+    """xs: (E, C, d) gathered tokens -> (E, C, d) expert outputs.
+
+    ``constrained=False`` drops the logical activation constraints —
+    required inside the expert-parallel shard_map, where every mesh axis
+    is manual and ``with_sharding_constraint`` would reject the spec.
+    """
     if quant.quantized:
         # PSQ per expert: vmap the quantized matmul over the expert dim,
         # sharing the per-layer quantizer state (paper quantizes at layer
@@ -76,17 +85,24 @@ def _expert_ffn(
         h = jax.nn.silu(g) * u
     else:
         h = jax.nn.gelu(g)
-    h = constrain(h, "experts", None, "expert_ffn")
+    if constrained:
+        h = constrain(h, "experts", None, "expert_ffn")
     return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
 
 
-def _moe_chunk(
-    p: Params, x: jax.Array, n_experts: int, top_k: int,
-    capacity: int, quant: QuantConfig, act: str,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Route one chunk of tokens. x: (T, d) -> (y, aux_loss, me_fraction)."""
-    t, d = x.shape
-    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+def _route_chunk(
+    router: jax.Array, x: jax.Array, n_experts: int, top_k: int,
+    capacity: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Top-k routing for one chunk: x (T, d) -> (sel_gate, sel_idx, aux, me).
+
+    Pure function of the (replicated) router weights, so the single
+    device and every expert-parallel shard compute the identical
+    ``(E, C)`` selection — the invariant that keeps the sharded combine
+    bit-exact with the local scatter-add.
+    """
+    t = x.shape[0]
+    logits = (x.astype(jnp.float32) @ router).astype(jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)                  # (T, E)
     gate_vals, gate_idx = jax.lax.top_k(probs, top_k)        # (T, K)
     gate_vals = gate_vals / jnp.maximum(
@@ -105,14 +121,93 @@ def _moe_chunk(
     assign = assign.at[jnp.arange(t)[:, None], gate_idx].set(gate_vals)
     # pick up to `capacity` highest-gate tokens per expert
     sel_gate, sel_idx = jax.lax.top_k(assign.T, capacity)    # (E, C)
+    return sel_gate, sel_idx, aux, me
+
+
+def _combine_chunk(x: jax.Array, ys: jax.Array, sel_idx: jax.Array):
+    """Scatter-add (E, C, d) gated expert outputs back to token order."""
+    d = x.shape[-1]
+    return jnp.zeros_like(x).at[sel_idx.reshape(-1)].add(
+        ys.reshape(-1, d), mode="drop"
+    )
+
+
+def _moe_chunk(
+    p: Params, x: jax.Array, n_experts: int, top_k: int,
+    capacity: int, quant: QuantConfig, act: str,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Route one chunk of tokens. x: (T, d) -> (y, aux_loss, me_fraction)."""
+    sel_gate, sel_idx, aux, me = _route_chunk(
+        p["router"], x, n_experts, top_k, capacity
+    )
     xs = jnp.take(x, sel_idx, axis=0)                        # (E, C, d)
     xs = xs * (sel_gate > 0.0)[..., None].astype(x.dtype)
     ys = _expert_ffn(p, xs, quant, act)                      # (E, C, d)
     ys = ys * sel_gate[..., None].astype(ys.dtype)
-    y = jnp.zeros_like(x).at[sel_idx.reshape(-1)].add(
-        ys.reshape(-1, d), mode="drop"
-    )
+    y = _combine_chunk(x, ys, sel_idx)
     return y, aux, me
+
+
+def _apply_moe_ep(
+    p: Params, groups: jax.Array, n_experts: int, top_k: int,
+    capacity: int, quant: QuantConfig, act: str, mesh, axis: str,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Expert-parallel dispatch over the ``axis`` mesh axis.
+
+    Each device owns ``E / n`` expert FFN stacks (``w_gate``/``w_up``/
+    ``w_down`` leading-dim sharded; router + PSQ quantizer state
+    replicated) and computes only its local experts' gathered tokens.
+    Routing is replicated — every shard derives the identical global
+    ``(E, C)`` selection from the replicated router — so an
+    ``all_gather`` of the local gated outputs reassembles the exact
+    ``(E, C, d)`` tensor the single-device path feeds its scatter-add,
+    and the combine is the identical op: bit-exact by construction for
+    ANY top_k (a psum-of-partials combine would reassociate the
+    per-token float sums across shards; the gather costs top_k x more
+    bandwidth and buys determinism).
+
+    ``groups`` (G, T, d) are the already-chunked token groups; the
+    group dim follows the ``batch`` rule (dispatch never crosses the
+    data axis), expert weights ride ``axis``.
+    """
+    n = mesh.shape[axis]
+    e_local = n_experts // n
+
+    pspecs = {
+        k: (P(axis) if k in ("w_gate", "w_up", "w_down")
+            else jax.tree.map(lambda _: P(), v))
+        for k, v in p.items()
+    }
+    gspec = shd.data_pspec(groups.ndim, groups.shape, exclude=(axis,))
+    g = groups.shape[0]
+    aux_spec = shd.data_pspec(1, (g,), exclude=(axis,))
+    me_spec = shd.data_pspec(2, (g, n_experts), exclude=(axis,))
+
+    def local_fn(pl, gl):
+        e_lo = jax.lax.axis_index(axis) * e_local
+
+        def phase1(xc):
+            sel_gate, sel_idx, aux, me = _route_chunk(
+                pl["router"], xc, n_experts, top_k, capacity
+            )
+            sg = jax.lax.dynamic_slice_in_dim(sel_gate, e_lo, e_local, 0)
+            si = jax.lax.dynamic_slice_in_dim(sel_idx, e_lo, e_local, 0)
+            xs = jnp.take(xc, si, axis=0)                # (E/n, C, d)
+            xs = xs * (sg > 0.0)[..., None].astype(xc.dtype)
+            ys = _expert_ffn(pl, xs, quant, act, constrained=False)
+            ys = ys * sg[..., None].astype(ys.dtype)
+            return ys, sel_idx, aux, me
+
+        ys_l, sel_idx, aux, me = jax.vmap(phase1)(gl)    # (G, E/n, C, d)
+        ys = jax.lax.all_gather(ys_l, axis, axis=1, tiled=True)
+        y = jax.vmap(_combine_chunk)(gl, ys, sel_idx)
+        return y, aux, me
+
+    fn = shard_map(
+        local_fn, mesh=mesh, in_specs=(pspecs, gspec),
+        out_specs=(gspec, aux_spec, me_spec), check_rep=False,
+    )
+    return fn(p, groups)
 
 
 def apply_moe_dense(
@@ -176,6 +271,14 @@ def apply_moe(
     either expert-parallel (E % axis == 0) or TP over the expert FFN.
     (The original token-major chunking resharded the whole activation
     per chunk; see EXPERIMENTS.md §Perf granite hillclimb.)
+
+    Under active expert-parallel rules (``RULES_EXPERT`` + a mesh with
+    an ``expert`` axis; see :func:`repro.parallel.sharding.expert_axes`)
+    the dispatch runs as a shard_map with each device computing its
+    local expert slab — bit-exact with the single-device path (see
+    :func:`_apply_moe_ep`). Falls back to single-device dispatch when
+    the expert count does not divide the axis. The ``dense`` impl stays
+    on the TP (``expert_ffn -> model``) path.
     """
     if impl == "dense":
         return apply_moe_dense(p, x, n_experts, top_k, quant, act=act)
@@ -188,10 +291,16 @@ def apply_moe(
     groups = x.reshape(b * n_chunks, chunk, d)
     capacity = min(chunk, max(1, int(capacity_factor * chunk * top_k / n_experts)))
 
-    def route(xc):
-        return _moe_chunk(p, xc, n_experts, top_k, capacity, quant, act)
+    ep = shd.expert_axes()
+    if ep is not None and n_experts % ep[0].shape[ep[1]] == 0:
+        ys, aux, mes = _apply_moe_ep(
+            p, groups, n_experts, top_k, capacity, quant, act, *ep
+        )
+    else:
+        def route(xc):
+            return _moe_chunk(p, xc, n_experts, top_k, capacity, quant, act)
 
-    ys, aux, mes = jax.vmap(route)(groups)
+        ys, aux, mes = jax.vmap(route)(groups)
     y = ys.reshape(b, n_chunks * chunk, d)[:, :s]
     y = constrain(y, "batch", "seq", "embed")
     stats = {

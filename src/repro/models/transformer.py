@@ -166,6 +166,28 @@ def _stacked(init_fn: Callable, key, n: int) -> Params:
     return jax.vmap(init_fn)(jax.random.split(key, n))
 
 
+def layer_scan(body: Callable, carry, xs, *, unroll: bool = False):
+    """``lax.scan`` over a stacked layer pytree, or the unrolled oracle.
+
+    ``unroll=False`` (the production path, ``cfg.scan_layers=True``) is a
+    plain ``jax.lax.scan``: one compiled block regardless of depth.
+    ``unroll=True`` replays the exact same body as an explicit Python
+    loop over ``xs``'s leading dim, restacking the per-layer outputs —
+    compile cost linear in depth, but structurally identical math, which
+    makes it the scan-vs-loop parity reference for the golden suite.
+    """
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if not ys or all(y is None for y in ys):
+        return carry, None
+    return carry, jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+
+
 # block forwards ------------------------------------------------------------
 
 def _merge_stats(agg: Dict, st: Dict):
@@ -357,8 +379,9 @@ def _scan_blocks(
         pzn = pzn + st.get("_pz_n", 1.0 if "p_zero_frac" in st else 0.0)
         return (x2, aux, pz, pzn), None
 
-    (x, aux, pz, pzn), _ = jax.lax.scan(
-        one, (x, jnp.zeros(()), jnp.zeros(()), jnp.zeros(())), stacked
+    (x, aux, pz, pzn), _ = layer_scan(
+        one, (x, jnp.zeros(()), jnp.zeros(()), jnp.zeros(())), stacked,
+        unroll=not cfg.scan_layers,
     )
     stats["moe_aux_loss"] = stats.get("moe_aux_loss", 0.0) + aux
     stats["_pz_sum"] = stats.get("_pz_sum", 0.0) + pz
@@ -409,7 +432,8 @@ def backbone(params: Params, cfg: ArchConfig, x: jax.Array,
                 x_, st2 = _shared_attn_fwd(params, x_, cfg)
                 return (x_, aux + st_.get("_pz_sum", 0.0)), None
 
-            (x, _), _ = jax.lax.scan(superstep, (x, jnp.zeros(())), grouped)
+            (x, _), _ = layer_scan(superstep, (x, jnp.zeros(())), grouped,
+                                   unroll=not cfg.scan_layers)
         x = _scan_blocks(params["mamba_tail"], x, _mamba_block_fwd, cfg, stats)
     elif cfg.family == "ssm":
         g, pg = plan["groups"], plan["per_group"]
@@ -430,8 +454,9 @@ def backbone(params: Params, cfg: ArchConfig, x: jax.Array,
                 x_, _ = _slstm_block_fwd(sp, x_, cfg)
                 return (x_,), None
 
-            (x,), _ = jax.lax.scan(
-                superstep, (x,), (grouped, params["slstm_blocks"])
+            (x,), _ = layer_scan(
+                superstep, (x,), (grouped, params["slstm_blocks"]),
+                unroll=not cfg.scan_layers,
             )
         x = _scan_blocks(params["mlstm_tail"], x, _mlstm_block_fwd, cfg, stats)
     return x

@@ -70,6 +70,18 @@ RULES_2D: Dict[str, MeshAxes] = {
 
 RULES_3D: Dict[str, MeshAxes] = dict(RULES_2D, batch=("pod", "data"))
 
+# Expert-parallel serving: a dedicated ``expert`` mesh axis owns the
+# expert dim of MoE FFN stacks (router stays replicated; activations
+# inside an expert shard still follow the 2-D table). Activated by the
+# engine / launcher for meshes that carry an ``expert`` axis
+# (``--mesh DATA,MODEL,EXPERT``); :func:`expert_axes` is the query the
+# MoE layer uses to pick the shard_map execution.
+RULES_EXPERT: Dict[str, MeshAxes] = dict(RULES_2D, experts="expert")
+
+# names of the raw expert-stacked weight leaves of a MoE block
+# (repro.models.moe.init_moe) — the leaves expert placement targets
+_EXPERT_WEIGHT_KEYS = ("w_gate", "w_up", "w_down")
+
 
 class _State(threading.local):
     def __init__(self):
@@ -238,6 +250,79 @@ def shard_packed_tree(tree: Any, mesh: Mesh,
     if isinstance(tree, (list, tuple)):
         return type(tree)(shard_packed_tree(v, mesh, rules) for v in tree)
     return tree
+
+
+def expert_axes() -> Optional[Tuple[Mesh, str]]:
+    """The (mesh, axis name) expert parallelism is active on, else None.
+
+    The expert-parallel analogue of :func:`tp_axes`: active when a rules
+    table is installed with a REAL mesh, the table maps the logical
+    ``experts`` axis to a single mesh axis (``RULES_EXPERT``), and that
+    axis has size > 1. ``repro.models.moe.apply_moe`` consults this to
+    decide between the single-device dispatch and the shard_map
+    expert-parallel execution.
+    """
+    rules, mesh = _STATE.rules, _STATE.mesh
+    if rules is None or not isinstance(mesh, Mesh):
+        return None
+    ax = rules.get("experts")
+    if not isinstance(ax, str) or mesh.shape.get(ax, 1) <= 1:
+        return None
+    return mesh, ax
+
+
+def rules_for_mesh(mesh: Optional[Mesh]) -> Dict[str, MeshAxes]:
+    """Pick the default rules table for a mesh by its axis names.
+
+    A mesh carrying an ``expert`` axis gets :data:`RULES_EXPERT`
+    (expert-parallel MoE next to the usual data x model rules); a
+    ``pod`` axis gets :data:`RULES_3D`; anything else — including no
+    mesh — the 2-D table.
+    """
+    names = set(getattr(mesh, "axis_names", ()) or ())
+    if "expert" in names:
+        return RULES_EXPERT
+    if "pod" in names:
+        return RULES_3D
+    return RULES_2D
+
+
+def shard_expert_params(tree: Any, mesh: Mesh,
+                        rules: Optional[Dict[str, MeshAxes]] = None) -> Any:
+    """Place raw expert-stacked MoE weights over the ``experts`` axis.
+
+    Walks a (served) param tree and ``device_put``s every
+    ``w_gate``/``w_up``/``w_down`` leaf with its expert dim — position
+    ``ndim - 3``, which holds for both per-layer ``(E, d, ff)`` and
+    scan-stacked ``(L, E, d, ff)`` stacks — on the rules' ``experts``
+    mesh axis. Router weights, PSQ quantizer states and every non-MoE
+    node pass through replicated (untouched). Leaves whose expert count
+    does not divide the axis stay replicated too (the divisibility
+    story of the rules table).
+    """
+    rules = rules if rules is not None else RULES_EXPERT
+    ax = rules.get("experts")
+    if not isinstance(ax, str) or mesh.shape.get(ax, 1) <= 1:
+        return tree
+
+    def place(node: Any) -> Any:
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if (k in _EXPERT_WEIGHT_KEYS and hasattr(v, "ndim")
+                        and v.ndim >= 3
+                        and v.shape[v.ndim - 3] % mesh.shape[ax] == 0):
+                    spec = [None] * v.ndim
+                    spec[v.ndim - 3] = ax
+                    out[k] = jax.device_put(v, NamedSharding(mesh, P(*spec)))
+                else:
+                    out[k] = place(v)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(place(v) for v in node)
+        return node
+
+    return place(tree)
 
 
 def tp_axes() -> Optional[Tuple[Mesh, str]]:

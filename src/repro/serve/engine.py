@@ -78,7 +78,11 @@ from jax.sharding import Mesh
 
 from repro.configs.base import ArchConfig
 from repro.models import decode as D
-from repro.parallel.sharding import RULES_2D, axis_rules
+from repro.parallel.sharding import (
+    axis_rules,
+    rules_for_mesh,
+    shard_expert_params,
+)
 from repro.serve.paged_kv import PagedKVManager, PoolExhausted
 
 PyTree = Any
@@ -244,8 +248,16 @@ class ServeEngine:
         # constrain() annotations) and packed PSQ layers go tensor-
         # parallel over "model" (core.psq_linear.serve_linear_tp). With
         # mesh=None every annotation is a no-op — single-device engine.
+        # A mesh carrying an "expert" axis defaults to the expert-
+        # parallel table (RULES_EXPERT): MoE expert FFN stacks place
+        # over "expert" at load and apply_moe picks its shard_map path.
         self.mesh = mesh
-        self._rules = rules if rules is not None else RULES_2D
+        self._rules = rules if rules is not None else rules_for_mesh(mesh)
+        if (mesh is not None and params is not None
+                and "expert" in getattr(mesh, "axis_names", ())):
+            self.params = params = shard_expert_params(
+                params, mesh, self._rules
+            )
 
         # scheduler telemetry (continuous mode)
         self.decode_steps = 0

@@ -341,7 +341,8 @@ class TestPagedEngineParity:
             ServeEngine(params, cfg,
                         EngineConfig(max_len=60, paged=True, block_size=16))
 
-    def test_no_recompile_after_warmup_paged(self, tiny, shared_prompts):
+    def test_no_recompile_after_warmup_paged(self, tiny, shared_prompts,
+                                             compile_counts):
         """The paged decode step compiles once; a repeated workload adds
         zero compilations across decode/prefill/suffix/insert."""
         cfg, params = tiny
@@ -350,17 +351,15 @@ class TestPagedEngineParity:
                                        block_size=8))
         fns = [eng._decode_multi_paged, eng._prefill_bucket,
                eng._prefill_suffix, eng._insert_paged]
-        if not all(hasattr(f, "_cache_size") for f in fns):
-            pytest.skip("jax version without jit _cache_size introspection")
         for p in shared_prompts:
             eng.submit(p, max_new_tokens=5)
         eng.run()
-        warm = [f._cache_size() for f in fns]
+        warm = compile_counts(*fns)
         assert warm[0] == 1, "paged decode step must compile exactly once"
         for p in shared_prompts:
             eng.submit(p, max_new_tokens=5)
         eng.run()
-        assert [f._cache_size() for f in fns] == warm, \
+        assert compile_counts(*fns) == warm, \
             "re-running an already-seen workload must not recompile"
 
     @pytest.mark.skipif(len(jax.devices()) < 2, reason="needs >= 2 devices")

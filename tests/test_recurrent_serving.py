@@ -132,27 +132,26 @@ class TestSlotReuse:
 
 class TestJitStability:
     @pytest.mark.parametrize("arch", ("xlstm-350m", "zamba2-7b"))
-    def test_no_recompile_after_warmup(self, models, arch):
+    def test_no_recompile_after_warmup(self, models, arch, compile_counts):
         cfg, params = models[arch]
         eng = ServeEngine(params, cfg, EngineConfig(max_batch=4, max_len=64))
         fns = [eng._decode_multi, eng._prefill_bucket, eng._insert]
-        if not all(hasattr(f, "_cache_size") for f in fns):
-            pytest.skip("jax version without jit _cache_size introspection")
         rng = np.random.RandomState(1)
         trace = [(rng.randint(0, cfg.vocab_size, size=int(rng.randint(2, 17))),
                   int(rng.randint(2, 9))) for _ in range(8)]
         for p, mn in trace:
             eng.submit(p, max_new_tokens=mn)
         eng.run()
-        warm = [f._cache_size() for f in fns]
+        warm = compile_counts(*fns)
         assert warm[0] == 1, "recurrent decode loop must compile exactly once"
         for p, mn in trace:
             eng.submit(p, max_new_tokens=mn)
         eng.run()
-        assert [f._cache_size() for f in fns] == warm, \
+        assert compile_counts(*fns) == warm, \
             "re-running an already-seen workload must not recompile"
 
-    def test_static_prefill_buckets_batch_and_length(self, models):
+    def test_static_prefill_buckets_batch_and_length(self, models,
+                                                     compile_counts):
         """The static path pow2-buckets the admitted batch dim (and, for
         recurrent right-pad, the prompt length), so uneven final batches
         reuse the full-batch compile instead of recompiling per size."""
@@ -160,8 +159,6 @@ class TestJitStability:
         eng = ServeEngine(params, cfg,
                           EngineConfig(max_batch=4, max_len=64,
                                        mode="static"))
-        if not hasattr(eng._prefill_full, "_cache_size"):
-            pytest.skip("jax version without jit _cache_size introspection")
         rng = np.random.RandomState(0)
         # 7 requests, prompt lengths all inside the 8-bucket: batches of
         # 4 and 3 — the 3-batch pads to 4 and hits the same compile
@@ -169,7 +166,7 @@ class TestJitStability:
             eng.submit(rng.randint(0, cfg.vocab_size, size=6),
                        max_new_tokens=3)
         eng.run()
-        assert eng._prefill_full._cache_size() == 1, \
+        assert compile_counts(eng._prefill_full) == [1], \
             "static prefill must compile once per (batch, length) bucket"
 
 

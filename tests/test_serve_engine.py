@@ -85,15 +85,13 @@ class TestContinuousScheduling:
             assert batched[uid] == _greedy_outputs(cfg, params, p, 8), \
                 f"request {uid} diverged from sequential decode"
 
-    def test_no_recompile_after_warmup(self, tiny):
+    def test_no_recompile_after_warmup(self, tiny, compile_counts):
         """Fixed shapes: decode compiles once; prefill/insert compile per
         (bucket length, bucket batch) pair; a repeat of the same workload
         adds zero compilations."""
         cfg, params = tiny
         eng = ServeEngine(params, cfg, EngineConfig(max_batch=4, max_len=64))
         fns = [eng._decode_multi, eng._prefill_bucket, eng._insert]
-        if not all(hasattr(f, "_cache_size") for f in fns):
-            pytest.skip("jax version without jit _cache_size introspection")
 
         rng = np.random.RandomState(1)
         trace = [(rng.randint(0, cfg.vocab_size, size=int(rng.randint(2, 17))),
@@ -101,13 +99,13 @@ class TestContinuousScheduling:
         for p, mn in trace:
             eng.submit(p, max_new_tokens=mn)
         eng.run()
-        warm = [f._cache_size() for f in fns]
+        warm = compile_counts(*fns)
         assert warm[0] == 1, "decode loop must compile exactly once"
 
         for p, mn in trace:
             eng.submit(p, max_new_tokens=mn)
         eng.run()
-        assert [f._cache_size() for f in fns] == warm, \
+        assert compile_counts(*fns) == warm, \
             "re-running an already-seen workload must not recompile"
 
     def test_occupancy_and_scheduler_stats(self, tiny):
@@ -179,7 +177,7 @@ class TestContinuousScheduling:
 
 
 class TestStaticScheduling:
-    def test_static_prefill_buckets_the_batch_dim(self, tiny):
+    def test_static_prefill_buckets_the_batch_dim(self, tiny, compile_counts):
         """_prefill_full pow2-buckets the admitted batch size: a trailing
         batch of 3 pads to the 4-bucket and reuses the full-batch
         compile, and a repeat workload adds zero compilations."""
@@ -187,20 +185,18 @@ class TestStaticScheduling:
         eng = ServeEngine(params, cfg,
                           EngineConfig(max_batch=4, max_len=64,
                                        mode="static"))
-        if not hasattr(eng._prefill_full, "_cache_size"):
-            pytest.skip("jax version without jit _cache_size introspection")
         rng = np.random.RandomState(0)
         for _ in range(7):                      # batches of 4 then 3
             eng.submit(rng.randint(0, cfg.vocab_size, size=6),
                        max_new_tokens=3)
         eng.run()
-        assert eng._prefill_full._cache_size() == 1, \
+        assert compile_counts(eng._prefill_full) == [1], \
             "batches of 4 and 3 must share one (batch-bucket, len) compile"
         for _ in range(7):
             eng.submit(rng.randint(0, cfg.vocab_size, size=6),
                        max_new_tokens=3)
         eng.run()
-        assert eng._prefill_full._cache_size() == 1
+        assert compile_counts(eng._prefill_full) == [1]
 
     def test_encdec_batches_get_their_own_side_inputs(self):
         """Side inputs are positional by submission order: request i must
@@ -283,7 +279,8 @@ class TestShardedServing:
         assert out == base
 
     @pytest.mark.skipif(len(jax.devices()) < 2, reason="needs >= 2 devices")
-    def test_sharded_engine_stays_jit_stable(self, tiny, prompts):
+    def test_sharded_engine_stays_jit_stable(self, tiny, prompts,
+                                             compile_counts):
         """The no-recompile contract survives sharding: decode compiles
         once, a repeated workload adds zero compilations."""
         cfg, params = tiny
@@ -291,12 +288,10 @@ class TestShardedServing:
         eng = ServeEngine(params, cfg,
                           EngineConfig(max_batch=4, max_len=64), mesh=mesh)
         fns = [eng._decode_multi, eng._prefill_bucket, eng._insert]
-        if not all(hasattr(f, "_cache_size") for f in fns):
-            pytest.skip("jax version without jit _cache_size introspection")
         for p in prompts:
             eng.submit(p, max_new_tokens=5)
         eng.run()
-        warm = [f._cache_size() for f in fns]
+        warm = compile_counts(*fns)
         # sharded decode may compile twice at warm-up: the first step
         # canonicalizes the eagerly-placed cache's shardings (XLA drops
         # size-1 mesh-axis entries), the second traces the steady state
@@ -304,7 +299,7 @@ class TestShardedServing:
         for p in prompts:
             eng.submit(p, max_new_tokens=5)
         eng.run()
-        assert [f._cache_size() for f in fns] == warm, \
+        assert compile_counts(*fns) == warm, \
             "re-running an already-seen workload must not recompile"
 
 
