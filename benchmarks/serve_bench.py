@@ -39,6 +39,14 @@ axis (router replicated, bit-exact dispatch; docs/parallelism.md),
 asserting token-identical greedy outputs. ``--moe`` runs only this
 section (``BENCH_serve_moe.json``).
 
+The ``spec`` section (``--spec`` → ``BENCH_serve_spec.json``) benches
+speculative decoding against vanilla continuous serving at ``spec_k``
+in {2, 4} with two drafts — an untrained 1-layer copy (accept-rate
+floor) and the served model itself (accept-rate ceiling) — plus the
+side-input families (whisper encdec, llava VLM patches) continuous vs
+static. Every entry records accept rate, host syncs and the tokens/s
+ratio, and asserts greedy outputs token-identical across all paths.
+
 Every per-mode entry reports the engine's modeled hwmodel energy
 attribution (``energy_pj``, ``energy_pj_per_request``, ``edap``,
 ``mean_occupancy`` — docs/energy.md). The ``--energy`` section serves
@@ -112,16 +120,24 @@ def make_shared_prefix_trace(
 
 def bench_mode(mode: str, params, cfg, trace, slots: int,
                max_len: int, mesh=None, repeats: int = 1,
+               extra_inputs=None, draft_params=None,
                **ecfg_kw) -> Dict[str, float]:
     eng = ServeEngine(params, cfg,
                       EngineConfig(max_batch=slots, max_len=max_len,
                                    mode=mode, **ecfg_kw),
-                      mesh=mesh)
+                      extra_inputs=extra_inputs, mesh=mesh,
+                      draft_params=draft_params)
+    # side-input rows are positional by uid, which drifts across the
+    # warm-up + repeat runs below — pin each request to its trace row
+    def submit_all():
+        for i, (prompt, mnew) in enumerate(trace):
+            eng.submit(prompt, max_new_tokens=mnew,
+                       extra_idx=i if extra_inputs else None)
+
     # warm-up pass: compile every (bucket, batch) shape the trace needs
     # (and, for a paged engine, populate the prefix index — the measured
     # passes below are the steady state)
-    for prompt, mnew in trace:
-        eng.submit(prompt, max_new_tokens=mnew)
+    submit_all()
     eng.run()
 
     # best-of-N: sub-second CPU runs are wall-clock noisy
@@ -129,8 +145,7 @@ def bench_mode(mode: str, params, cfg, trace, slots: int,
     for _ in range(max(repeats, 1)):
         eng.reset_stats()
         t0 = time.time()
-        for prompt, mnew in trace:
-            eng.submit(prompt, max_new_tokens=mnew)
+        submit_all()
         reqs = eng.run()
         w = time.time() - t0
         if w < wall:
@@ -160,6 +175,10 @@ def bench_mode(mode: str, params, cfg, trace, slots: int,
     }
     if "paged" in sched:
         out["paged"] = sched["paged"]
+    if "spec_k" in sched:
+        for k in ("spec_k", "spec_rounds", "spec_proposed",
+                  "spec_accepted", "spec_accept_rate"):
+            out[k] = sched[k]
     return out
 
 
@@ -411,7 +430,131 @@ def bench_moe(args) -> Dict:
     return out
 
 
+def bench_spec(args) -> Dict:
+    """Speculative decoding + side-input section (``BENCH_serve_spec.json``).
+
+    Three comparisons on one mixed-length trace, all token-identical by
+    construction (and asserted):
+
+    * ``vanilla`` vs ``spec`` at ``spec_k`` in {2, 4} with a 1-layer
+      random draft — the accept-rate floor (an untrained draft rarely
+      matches the main argmax), so the entry measures pure verify-round
+      overhead;
+    * the same ``spec_k`` values with the served model as its own draft
+      — the accept-rate ceiling (every proposal matches), showing the
+      host-sync reduction speculative rounds buy when the draft is good;
+    * ``side_input_continuous``: the encdec (whisper) and
+      VLM-with-patches (llava) reduced configs served through the
+      continuous slot pool vs the static oracle loop, tokens matched.
+    """
+    cfg = get_config(args.arch).reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    if args.smoke:
+        n_req, prompt_rng, new_rng, slots, max_len = 8, (4, 16), (4, 10), 4, 48
+    else:
+        n_req, prompt_rng, new_rng = args.requests, (8, 32), (8, 32)
+        slots, max_len = args.slots, 128
+    trace = make_trace(n_req, prompt_rng, new_rng, cfg.vocab_size)
+
+    def outputs(**kw):
+        dp = kw.pop("draft_params", None)
+        eng = ServeEngine(params, cfg,
+                          EngineConfig(max_batch=slots, max_len=max_len,
+                                       mode="continuous", **kw),
+                          draft_params=dp)
+        for prompt, mnew in trace:
+            eng.submit(prompt, max_new_tokens=mnew)
+        return {r.uid: list(r.output) for r in eng.run()}
+
+    out: Dict = {"arch": args.arch, "requests": n_req, "slots": slots,
+                 "max_len": max_len}
+    base = bench_mode("continuous", params, cfg, trace, slots, max_len,
+                      repeats=3)
+    out["vanilla"] = base
+    base_toks = outputs()
+    print(f"[serve_bench] spec vanilla: {base['tokens_per_s']:8.1f} tok/s  "
+          f"syncs {base['host_syncs']}")
+
+    dcfg1 = dataclasses.replace(cfg, n_layers=1)
+    drafts = {
+        "draft_1layer": (dcfg1, init_model(jax.random.PRNGKey(1), dcfg1)),
+        "draft_self": (cfg, params),
+    }
+    for name, (dcfg, dparams) in drafts.items():
+        sec: Dict = {"draft_layers": dcfg.n_layers}
+        for k in (2, 4):
+            r = bench_mode("continuous", params, cfg, trace, slots,
+                           max_len, repeats=3, spec_k=k, draft_config=dcfg,
+                           draft_params=dparams)
+            r["tokens_match"] = outputs(
+                spec_k=k, draft_config=dcfg, draft_params=dparams
+            ) == base_toks
+            r["speedup_tokens_per_s"] = (
+                r["tokens_per_s"] / max(base["tokens_per_s"], 1e-9)
+            )
+            sec[f"k{k}"] = r
+            print(f"[serve_bench] spec {name} k={k}: "
+                  f"{r['tokens_per_s']:8.1f} tok/s  "
+                  f"accept {r['spec_accept_rate']:.3f}  "
+                  f"syncs {r['host_syncs']}  "
+                  f"({r['speedup_tokens_per_s']:.2f}x vs vanilla)  "
+                  f"tokens_match={r['tokens_match']}")
+            if not r["tokens_match"]:
+                raise SystemExit(f"[serve_bench] spec {name} k={k}: greedy "
+                                 f"outputs diverged from vanilla decode")
+        out[name] = sec
+
+    side: Dict = {}
+    rng = np.random.RandomState(0)
+    for arch in ("whisper-large-v3", "llava-next-mistral-7b"):
+        scfg = get_config(arch).reduced()
+        sparams = init_model(jax.random.PRNGKey(0), scfg)
+        strace = make_trace(n_req, (4, 10), new_rng, scfg.vocab_size)
+        extra = {}
+        key = "enc_embeds" if scfg.family == "encdec" else "patch_embeds"
+        extra[key] = (rng.randn(n_req, 8, scfg.d_model) * 0.1
+                      ).astype(np.float32)
+        entry: Dict = {"family": scfg.family, "side_input": key}
+        for mode in ("static", "continuous"):
+            entry[mode] = bench_mode(mode, sparams, scfg, strace, slots,
+                                     max_len, repeats=3,
+                                     extra_inputs=extra)
+        entry["tokens_match"] = True
+        for mode in ("static", "continuous"):
+            eng = ServeEngine(sparams, scfg,
+                              EngineConfig(max_batch=slots, max_len=max_len,
+                                           mode=mode),
+                              extra_inputs=extra)
+            for i, (prompt, mnew) in enumerate(strace):
+                eng.submit(prompt, max_new_tokens=mnew, extra_idx=i)
+            toks = {r.uid: list(r.output) for r in eng.run()}
+            if mode == "static":
+                ref = toks
+            else:
+                entry["tokens_match"] = toks == ref
+        entry["speedup_tokens_per_s"] = (
+            entry["continuous"]["tokens_per_s"]
+            / max(entry["static"]["tokens_per_s"], 1e-9)
+        )
+        print(f"[serve_bench] side-input {arch} ({scfg.family}): "
+              f"continuous {entry['continuous']['tokens_per_s']:8.1f} tok/s "
+              f"({entry['speedup_tokens_per_s']:.2f}x vs static)  "
+              f"tokens_match={entry['tokens_match']}")
+        if not entry["tokens_match"]:
+            raise SystemExit(f"[serve_bench] side-input {arch}: continuous "
+                             f"outputs diverged from static")
+        side[arch] = entry
+    out["side_input_continuous"] = side
+    return out
+
+
 def run(args) -> Dict:
+    if args.spec:
+        return {
+            "bench": "serve_spec",
+            "platform": jax.default_backend(),
+            "spec": bench_spec(args),
+        }
     if args.energy:
         return {
             "bench": "serve_energy",
@@ -593,6 +736,12 @@ def main() -> None:
                          "granite-moe single-device vs expert-parallel "
                          "(with --devices N) with a bit-exact token "
                          "check (BENCH_serve_moe.json)")
+    ap.add_argument("--spec", action="store_true",
+                    help="run only the speculative-decoding + side-input "
+                         "section: vanilla vs spec_k in {2,4} with floor/"
+                         "ceiling drafts plus whisper/llava continuous-vs-"
+                         "static, all token-matched "
+                         "(BENCH_serve_spec.json)")
     ap.add_argument("--energy", action="store_true",
                     help="run only the modeled energy/EDAP section: "
                          "styles x occupancy-grid sweep on one "

@@ -5,15 +5,21 @@
         [--slots 4] [--mode auto|continuous|static] \
         [--decode-horizon H] [--mesh DATA,MODEL] [--devices N]
 
-KV-cache AND recurrent-state families (SSM/xLSTM/hybrid) serve through
-the continuous-batching slot pool (per-step retirement + mid-flight
-admission, see docs/serving.md); only side-input families (encdec/VLM
-with patch embeds) fall back to static batching. ``--paged`` switches
-the slot pool to the paged KV cache — fixed-size pages, block tables
-and shared-prefix radix reuse; attention-KV families only
-(docs/memory.md). ``--decode-horizon H`` batches up to H greedy decode
-steps into one on-device ``lax.while_loop`` per host round-trip
-(bit-exact with H=1; greedy only — see docs/serving.md).
+Every family — KV-cache, recurrent-state (SSM/xLSTM/hybrid) AND the
+side-input families (encdec cross-KV, VLM patch embeds) — serves
+through the continuous-batching slot pool (per-step retirement +
+mid-flight admission, per-slot side-input pools; see docs/serving.md).
+``--mode static`` keeps the drain-the-queue oracle loop around for
+comparison. ``--paged`` switches the slot pool to the paged KV cache —
+fixed-size pages, block tables and shared-prefix radix reuse;
+attention-KV families only (docs/memory.md). ``--decode-horizon H``
+batches up to H greedy decode steps into one on-device
+``lax.while_loop`` per host round-trip (bit-exact with H=1; greedy
+only). ``--spec-k K`` turns on speculative decoding: a small draft
+model (``--draft`` arch, default a 1-layer copy of the served config)
+proposes K greedy tokens per slot and the main model verifies them in
+one masked forward — token-identical to vanilla greedy decode, see
+docs/serving.md for the lifecycle and rollback rule.
 
 Multi-device: ``--mesh 1,4`` runs the PSQ datapath tensor-parallel over
 a 4-way ``model`` axis (packed layers column-sharded, one psum per
@@ -72,6 +78,13 @@ def _parse_args():
     ap.add_argument("--no-prefix-reuse", action="store_true",
                     help="keep the paged layout but disable the "
                          "shared-prefix radix index")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft-proposed tokens "
+                         "per verify round (0 = off; continuous greedy "
+                         "KV families only)")
+    ap.add_argument("--draft", default=None, choices=list_archs(),
+                    help="draft arch for --spec-k (same family; "
+                         "default: 1-layer copy of --arch)")
     ap.add_argument("--energy-style", default="hcim",
                     choices=["adc", "quarry", "hcim"],
                     help="hwmodel accounting style for the per-request "
@@ -152,6 +165,15 @@ def main():
     if args.int4:
         params = pack_tree_for_serving(params)
 
+    draft_cfg, draft_params = None, None
+    if args.spec_k:
+        draft_cfg = (get_config(args.draft).reduced() if args.draft
+                     else dataclasses.replace(cfg, n_layers=1))
+        draft_params = init_model(jax.random.PRNGKey(1), draft_cfg)
+        print(f"[serve] spec decode: k={args.spec_k}, draft "
+              f"{args.draft or '1-layer copy'} "
+              f"({draft_cfg.n_layers} layers)")
+
     extra = {}
     rng = np.random.RandomState(0)
     if cfg.family == "encdec":
@@ -165,9 +187,11 @@ def main():
                      decode_horizon=args.decode_horizon,
                      paged=args.paged, block_size=args.block_size,
                      prefix_reuse=not args.no_prefix_reuse,
-                     energy_style=args.energy_style),
+                     energy_style=args.energy_style,
+                     spec_k=args.spec_k, draft_config=draft_cfg),
         extra_inputs=extra,
         mesh=mesh,
+        draft_params=draft_params,
     )
     for _ in range(args.requests):
         eng.submit(rng.randint(0, cfg.vocab_size, size=rng.randint(4, 16)),
@@ -178,6 +202,9 @@ def main():
     fmt = "psq-packed" if args.psq_packed else ("int4" if args.int4 else "fp")
     print(f"[serve] {args.arch} weights={fmt} scheduler={sched}")
     print(f"[serve] {args.arch} weights={fmt}: {stats}")
+    if args.spec_k:
+        print(f"[serve] {args.arch} spec: rounds={sched['spec_rounds']}, "
+              f"accept_rate={sched['spec_accept_rate']:.3f}")
     print(f"[serve] {args.arch} energy[{sched['energy_style']}]: "
           f"{sched['energy_pj_total']:.1f} pJ total, "
           f"{sched['energy_pj_per_request']:.1f} pJ/request, "

@@ -307,19 +307,22 @@ def cross_attention_cache(
 def decode_cross_attention(
     p: Params, x: jax.Array, xcache: Dict, cfg: AttnConfig, quant: QuantConfig
 ) -> Tuple[jax.Array, Dict]:
-    b = x.shape[0]
+    # x: (B, S, d) — S is 1 for classic decode, K+1 for spec verify.
+    # Cross-attention has no causal mask and no positions, so any query
+    # width attends the full encoder output identically.
+    b, s, _ = x.shape
     q, stats = apply_linear(p["wq"], x, quant)
-    q = q.reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
     if cfg.qk_norm:
         q = apply_norm("rmsnorm", p["q_norm"], q)
     k, v = xcache["k"], xcache["v"]
     groups = cfg.n_heads // cfg.n_kv_heads
-    qh = q.reshape(b, 1, cfg.n_kv_heads, groups, cfg.head_dim)
+    qh = q.reshape(b, s, cfg.n_kv_heads, groups, cfg.head_dim)
     logits = jnp.einsum("bskgd,btkd->bkgst", qh, k.astype(q.dtype))
     logits = logits / math.sqrt(cfg.head_dim)
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
     ctx = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(q.dtype))
-    ctx = ctx.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    ctx = ctx.reshape(b, s, cfg.n_heads * cfg.head_dim)
     y, st = apply_linear(p["wo"], ctx, quant)
     stats.update(st)
     return y, stats

@@ -151,7 +151,7 @@ def init_cache(
 
 def cache_init(
     params: Params, cfg: ArchConfig, n_slots: int, max_len: int,
-    dtype=jnp.bfloat16,
+    dtype=jnp.bfloat16, enc_len: int = 0,
 ) -> Dict:
     """A decode-slot pool: :func:`init_cache` with per-slot lengths.
 
@@ -161,8 +161,25 @@ def cache_init(
     writes per slot. Fresh slots start at length 0; admit a request with
     :func:`cache_insert`. Under active sharding rules the length vector
     follows the slot ("batch") axis, like every other per-slot leaf.
+
+    ``enc_len > 0`` (encdec only) adds a per-slot cross-attention KV
+    pool — ``cache["cross"]["k"/"v"]`` of shape
+    ``(n_layers, n_slots, enc_len, H_kv, D)`` — that admission scatters
+    each request's encoder-output KV into, exactly like the self KV
+    stripes. Free slots hold zeros: cross-attention over an all-zero
+    K/V is a uniform softmax times zero values, a harmless constant that
+    per-slot masking never lets a live request see.
     """
     cache = init_cache(params, cfg, n_slots, max_len, dtype=dtype)
+    if cfg.family == "encdec" and enc_len > 0:
+        shape = (cfg.n_layers, n_slots, enc_len,
+                 cfg.n_kv_heads, cfg.resolved_head_dim)
+
+        def z():
+            return constrain(jnp.zeros(shape, dtype),
+                             None, "batch", None, "kv_heads", "head_dim")
+
+        cache["cross"] = {"k": z(), "v": z()}
     cache["length"] = constrain(jnp.zeros((n_slots,), jnp.int32), "batch")
     return cache
 
@@ -185,9 +202,19 @@ def cache_insert(dst: Dict, src: Dict, row, slot, length) -> Dict:
     ``row``/``slot``/``length`` may be traced scalars: under ``jax.jit``
     this op is shape-stable across admissions (one compile per prefill
     bucket shape).
+
+    A prefilled chunk may also be WIDER than the pool on trailing axes
+    — VLM patch positions push the prefill KV width to
+    ``patches + bucket``, which can exceed the pool's ``max_len``. Every
+    TRUE position is below ``max_len`` (the engine's submit gate bounds
+    ``patches + prompt + max_new``), so the overhang is right-pad junk
+    and is sliced off before the scatter.
     """
     def ins(d, s_leaf):
         chunk = jax.lax.dynamic_slice_in_dim(s_leaf, row, 1, axis=1)
+        if any(cs > ds for cs, ds in zip(chunk.shape[2:], d.shape[2:])):
+            chunk = chunk[(slice(None), slice(None))
+                          + tuple(slice(0, ds) for ds in d.shape[2:])]
         start = (0, slot) + (0,) * (d.ndim - 2)
         return jax.lax.dynamic_update_slice(d, chunk.astype(d.dtype), start)
 
@@ -226,7 +253,8 @@ def hoist_decode_params(params: Params, cfg: ArchConfig) -> Params:
 
 # families whose decode state is a pure KV cache — the only ones the
 # paged layout supports (recurrent state has no sequence axis to page;
-# encdec/VLM side inputs already force the static scheduler)
+# encdec cross-attention KV has no pages and serves through the
+# contiguous continuous scheduler instead)
 _PAGED_FAMILIES = ("dense", "moe", "vlm")
 
 
@@ -487,7 +515,7 @@ def _prefix_sdpa(q, k_new, v_new, k_pref, v_pref, prefix_len, window: int):
 
 def prefill_paged_suffix(
     params: Params, cfg: ArchConfig, tokens: jax.Array, cache: Dict,
-    block_tables: jax.Array, prefix_len,
+    block_tables: jax.Array, prefix_len, per_token_ffn: bool = False,
 ) -> Tuple[jax.Array, Dict]:
     """Prefill ONLY a prompt's un-cached suffix against reused pages.
 
@@ -499,6 +527,12 @@ def prefill_paged_suffix(
     so the result matches a full-prompt prefill. Returns
     ``(suffix logits (B, W, V), {"k", "v"} stacked (L, B, W, Hkv, D))``
     ready for :func:`paged_cache_insert` at ``start=prefix_len``.
+
+    ``per_token_ffn`` routes each position in its own MoE group (see
+    :func:`_ffn_block`): the spec-decode verify reuses this function as
+    a width-(K+1) decode step and must be bit-exact with sequential
+    width-1 decoding, whereas prompt-suffix prefill keeps the default
+    width-chunked routing that full prefill uses.
     """
     _check_paged_family(cfg)
     q = cfg.quant
@@ -521,7 +555,7 @@ def prefill_paged_suffix(
             lv, cfg.sliding_window,
         )
         h, _ = apply_linear(lp["attn"]["wo"], ctx, q)
-        x2 = _ffn_block(lp, x_ + h, cfg, q)
+        x2 = _ffn_block(lp, x_ + h, cfg, q, per_token=per_token_ffn)
         return x2, (kh.astype(k_l.dtype), vh.astype(v_l.dtype))
 
     x, (ks, vs) = layer_scan(
@@ -591,9 +625,22 @@ def _select_slots(step_mask, new, old):
     )
 
 
-def _ffn_block(lp, x, cfg: ArchConfig, q):
+def _ffn_block(lp, x, cfg: ArchConfig, q, per_token: bool = False):
     """Post-attention block tail (norm2 + MoE-or-MLP, dense residual)
-    shared by the prefill, decode and paged-suffix paths."""
+    shared by the prefill, decode and paged-suffix paths.
+
+    ``per_token=True`` folds the width axis into the batch so every
+    token routes in its own MoE group of one — capacity-based dispatch
+    is width-dependent (tokens in a chunk compete for expert capacity),
+    and the spec-decode verify needs each position's output bit-exact
+    with the width-1 decode path it replaces. MLP families are
+    per-token already; the fold is a no-op reshape, so it is applied
+    only where it matters.
+    """
+    if per_token and "moe" in lp and x.shape[1] > 1:
+        b, s, d = x.shape
+        y = _ffn_block(lp, x.reshape(b * s, 1, d), cfg, q)
+        return y.reshape(b, s, d)
     z = L.apply_norm(cfg.norm_type, lp["norm2"], x)
     if "moe" in lp:
         h, _ = moe_mod.apply_moe(
@@ -853,7 +900,10 @@ def prefill(
     enc_out = None
     if cfg.family == "encdec":
         enc_out = encode(params, cfg, batch["enc_embeds"], {})
-    cache = init_cache(params, cfg, b, max_len, dtype=dtype, enc_out=enc_out)
+    # VLM patch positions can push the prefill width past max_len (the
+    # overhang is right-pad junk; cache_insert slices it back off)
+    cache = init_cache(params, cfg, b, max(max_len, s), dtype=dtype,
+                       enc_out=enc_out)
     plan = stack_plan(cfg)
 
     def attn_prefill_one(lp, x_, shared=False, cross=None):
@@ -978,7 +1028,11 @@ def prefill(
         x = x[:, batch["patch_embeds"].shape[1]:]
     logits = L.apply_lm_head(params["embed"], x, params.get("lm_head"))
     if lengths is not None:
-        cache["length"] = jnp.asarray(lengths, jnp.int32)
+        # patch positions sit below the prompt tokens in the KV cache,
+        # so each row's true cache length is patches + prompt length
+        off = (batch["patch_embeds"].shape[1]
+               if cfg.family == "vlm" and "patch_embeds" in batch else 0)
+        cache["length"] = jnp.asarray(lengths, jnp.int32) + off
     else:
         cache["length"] = jnp.asarray(s, jnp.int32)
     return logits, cache
@@ -1086,3 +1140,142 @@ def decode_multi_step_paged(
 
     return _multi_step_loop(step_fn, cache, last_tok, live, eos_ids,
                             budget, horizon)
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding (draft propose + batched verify)
+# ---------------------------------------------------------------------------
+#
+# A small draft model (same family/vocab, its own ArchConfig + cache)
+# proposes K greedy tokens per slot; the main model scores all K+1
+# positions (pending token + proposals) in ONE masked forward —
+# decode_verify below, the width-(K+1) generalization of decode_step
+# built on the same _prefix_sdpa math as paged suffix prefill. The
+# engine accepts the longest prefix where the draft's proposal equals
+# the main model's argmax, emits one bonus token, and rolls both caches
+# back with a per-slot length edit (plus PagedKVManager.truncate on the
+# paged path). Greedy outputs are token-identical to vanilla decode by
+# construction: every emitted token IS a main-model argmax at the same
+# cache state.
+#
+# _SPEC_FAMILIES: pure-KV families only. Recurrent state (ssm/hybrid)
+# folds every token into a fixed-size state — there is no length edit
+# that un-folds a rejected token.
+_SPEC_FAMILIES = ("dense", "moe", "vlm", "encdec")
+
+
+def decode_verify(
+    params: Params, cfg: ArchConfig, tokens: jax.Array, cache: Dict,
+) -> Tuple[jax.Array, Dict]:
+    """Score ``tokens`` (B, W) at positions ``length .. length+W-1``.
+
+    The width-W analogue of :func:`decode_step` on a contiguous slot
+    pool: queries attend the cached prefix (masked to
+    ``kpos < length``) plus the causal in-flight suffix via
+    :func:`_prefix_sdpa` — the same one-softmax construction the paged
+    suffix prefill uses, so each position's logits are bit-exact with W
+    sequential ``decode_step`` calls. K/V for all W positions are
+    committed at ``length .. length+W-1``; ``cache["length"]`` is NOT
+    advanced — the engine sets it to the accepted length afterwards
+    (the rollback is exactly that length edit; rejected positions'
+    K/V become junk above the length watermark, overwritten by the
+    next round's writes and never attended).
+    """
+    if cfg.family not in _SPEC_FAMILIES:
+        raise ValueError(
+            f"decode_verify supports the pure KV-cache families "
+            f"{_SPEC_FAMILIES}, got {cfg.family!r}"
+        )
+    q = cfg.quant
+    acfg = attn_config(cfg)
+    lengths = cache["length"]
+    b, w = tokens.shape
+    x = L.apply_embedding(params["embed"], tokens)
+    positions = lengths[:, None] + jnp.arange(w)[None, :]
+    has_cross = "cross" in cache
+
+    def body(x_, xs):
+        lp, k_l, v_l, cc = xs
+        xin = L.apply_norm(cfg.norm_type, lp["norm1"], x_)
+        qh, kh, vh, _ = attn_mod._project_qkv(lp["attn"], xin, acfg, q,
+                                              positions)
+        ctx = _prefix_sdpa(qh, kh, vh, k_l, v_l, lengths,
+                           cfg.sliding_window)
+        h, _ = apply_linear(lp["attn"]["wo"], ctx, q)
+        x_ = x_ + h
+        if has_cross:
+            h, _ = attn_mod.decode_cross_attention(
+                lp["cross"],
+                L.apply_norm(cfg.norm_type, lp["norm_cross"], x_),
+                cc, acfg, q,
+            )
+            x_ = x_ + h
+        return (_ffn_block(lp, x_, cfg, q, per_token=True),
+                (kh.astype(k_l.dtype), vh.astype(v_l.dtype)))
+
+    xs = (params["blocks"], cache["kv"]["k"], cache["kv"]["v"],
+          cache.get("cross", jnp.zeros((cfg.n_layers,))))
+    x, (ks, vs) = layer_scan(body, x, xs, unroll=not cfg.scan_layers)
+    x = L.apply_norm(cfg.norm_type, params["final_norm"], x)
+    logits = L.apply_lm_head(params["embed"], x, params.get("lm_head"))
+    new_cache = dict(cache)
+    new_cache["kv"] = _commit_kv(
+        cache["kv"], {"k_new": ks, "v_new": vs}, lengths)
+    return logits, new_cache
+
+
+def decode_propose(
+    params: Params, cfg: ArchConfig, cache: Dict, last_tok: jax.Array,
+    live: jax.Array, k_steps: int,
+) -> Tuple[jax.Array, Dict]:
+    """Run ``k_steps`` greedy draft steps; returns ((B, k_steps), cache).
+
+    A ``lax.scan`` over masked :func:`decode_step` calls. Proposal 0
+    extends the shared pending token, so the engine verifies proposals
+    ``0 .. k-2`` and the LAST step exists only to commit its
+    predecessor's K/V — after ``k_steps = K+1`` steps the draft cache
+    holds every position a full acceptance needs, and any rollback
+    target is a pure length edit. Non-live slots carry their token
+    unchanged and their step is a cache no-op (``step_mask``).
+    """
+    def step(carry, _):
+        c, tok = carry
+        logits, c = decode_step(params, cfg, tok[:, None], c,
+                                step_mask=live)
+        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        nxt = jnp.where(live, nxt, tok)
+        return (c, nxt), nxt
+
+    (cache, _), toks = jax.lax.scan(
+        step, (cache, last_tok.astype(jnp.int32)), None, length=k_steps)
+    return jnp.moveaxis(toks, 0, 1), cache
+
+
+def paged_verify_commit(
+    kv: Dict, upd: Dict, lengths: jax.Array, block_tables: jax.Array,
+    live: jax.Array,
+) -> Dict:
+    """Write a width-W verify's K/V into each live slot's pages.
+
+    The width-W analogue of :func:`_commit_kv_paged`: position
+    ``lengths[b] + j`` maps through slot ``b``'s block table (the engine
+    pre-reserves all W positions via ``PagedKVManager.prepare_append``
+    before the verify forward). Non-live slots are routed to the trash
+    page — their tables may hold stale entries that now alias reallocated
+    live pages, so masking by table contents alone is not enough.
+    ``upd`` is the ``{"k", "v"}`` stacked (L, B, W, Hkv, D) pair from
+    :func:`prefill_paged_suffix`.
+    """
+    bs = kv["k"].shape[2]
+    mb = block_tables.shape[1]
+    w = upd["k"].shape[2]
+    pos = lengths[:, None] + jnp.arange(w)[None, :]            # (B, W)
+    bi = jnp.minimum(pos // bs, mb - 1)
+    blk = jnp.take_along_axis(block_tables, bi, axis=1)
+    blk = jnp.where(live[:, None], blk, 0)
+    off = pos % bs
+
+    def wr(pool, new):
+        return pool.at[:, blk, off].set(new.astype(pool.dtype))
+
+    return {"k": wr(kv["k"], upd["k"]), "v": wr(kv["v"], upd["v"])}

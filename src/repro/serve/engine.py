@@ -29,15 +29,36 @@ scheduling modes share one API:
     prefill/insert compile once per (bucket length, bucket batch) pair,
     and nothing recompiles afterwards (asserted by the tier-1 suite).
 
-``static`` (fallback for side-input families, available everywhere)
+``static`` (an oracle/debug mode, available everywhere)
   * the classic drain-the-queue loop: one batch prefills together
     (batch dim pow2-bucketed so compiles stay enumerable) and decodes
-    in lockstep until every member finishes. Attention families
-    left-pad to the longest prompt; recurrent families right-pad with
-    per-row lengths (masked prefill), so their mixed-length static
-    batches are bit-exact with sequential and continuous decoding.
-    Required for per-request side inputs (encdec ``enc_embeds``, VLM
-    ``patch_embeds``), which are batch-positional.
+    in lockstep until every member finishes. EVERY family right-pads
+    to a pow2 length bucket with per-row true lengths — the causal
+    mask keeps pad columns out of attention, masked prefill keeps
+    them out of recurrent state — so mixed-length static batches are
+    bit-exact with sequential and continuous decoding.
+
+Per-request side inputs (encdec ``enc_embeds``, VLM ``patch_embeds``)
+serve through BOTH modes: continuous admission gathers each request's
+rows (positional by uid) into the bucketed prefill batch, and the slot
+pool carries an encoder-output cross-KV stripe per slot
+(``models.decode.cache_init(enc_len=...)``) scattered at admission
+exactly like self-attention KV; patch KV is baked into the prompt
+prefill with a per-slot ``patches + prompt`` length offset. Under a
+mesh the side-input pools shard over ``data`` with the other per-slot
+leaves.
+
+Speculative decoding (``EngineConfig.spec_k`` + ``draft_config`` +
+``draft_params``) accelerates greedy continuous serving: a small
+same-family draft model proposes K tokens per slot
+(``models.decode.decode_propose``), the main model scores all K+1
+positions in one masked forward (``models.decode.decode_verify``), and
+the engine accepts the longest proposal prefix matching the main
+model's argmaxes plus one bonus token. Rollback is a per-slot length
+edit on both caches (plus ``PagedKVManager.truncate`` page releases on
+the paged path) — outputs are token-identical to vanilla greedy decode
+by construction, because every emitted token IS a main-model argmax at
+the same cache state.
 
 The continuous scheduler supports two KV layouts
 (``EngineConfig.paged``): the default contiguous per-slot stripe, and
@@ -87,14 +108,22 @@ from repro.serve.paged_kv import PagedKVManager, PoolExhausted
 
 PyTree = Any
 
-# families the continuous scheduler admits mid-flight. KV-cache families
-# are exact under right-padded prefill (causal mask); recurrent-state
-# families (ssm/xlstm/hybrid) are exact because masked prefill makes pad
-# positions state no-ops and returns each row's final state at its TRUE
-# length (models/decode.prefill + per-layer `lengths` masking). Only
-# side-input families (encdec enc_embeds, VLM patch_embeds) still serve
-# static: their per-request inputs are batch-positional.
-_CONTINUOUS_FAMILIES = ("dense", "moe", "vlm", "hybrid", "ssm")
+# families the continuous scheduler admits mid-flight — all of them.
+# KV-cache families are exact under right-padded prefill (causal mask);
+# recurrent-state families (ssm/xlstm/hybrid) are exact because masked
+# prefill makes pad positions state no-ops and returns each row's final
+# state at its TRUE length (models/decode.prefill + per-layer `lengths`
+# masking); side-input families (encdec enc_embeds, VLM patch_embeds)
+# are exact because admission gathers each request's rows (positional
+# by uid) into the prefill batch and scatters the resulting per-request
+# state — cross-attention KV, patch-offset lengths — into the slot pool
+# like any other cache leaf.
+_CONTINUOUS_FAMILIES = ("dense", "moe", "vlm", "hybrid", "ssm", "encdec")
+
+# encoder width used for encdec engines constructed WITHOUT
+# extra_inputs["enc_embeds"] (zero encoder rows at a fixed width, so
+# both schedulers agree on the cross-KV pool shape)
+_DEFAULT_ENC_LEN = 8
 
 # families whose decode state is carried recurrently (no KV sequence
 # axis): slot admission scatters state rows instead of KV stripes, and
@@ -116,6 +145,7 @@ class Request:
     t_first_token: float = 0.0
     t_done: float = 0.0
     slot: int = -1                # decode slot served in (continuous mode)
+    extra_idx: int = -1           # side-input row (-1: positional by uid)
 
 
 @dataclasses.dataclass
@@ -143,6 +173,12 @@ class EngineConfig:
     # hwmodel accounting style for stats()["energy_pj_total"] etc.
     # (repro.hwmodel.system.serve_energy): adc | quarry | hcim
     energy_style: str = "hcim"
+    # speculative decoding (continuous greedy serving only): a draft
+    # model proposes spec_k tokens per slot, decode_verify scores them
+    # in one forward, rollback is a per-slot length edit. 0 => off.
+    # draft_params ride in as a ServeEngine constructor argument.
+    spec_k: int = 0
+    draft_config: Optional[ArchConfig] = None
 
 
 def _next_pow2(n: int) -> int:
@@ -206,7 +242,8 @@ class ServeEngine:
 
     def __init__(self, params: PyTree, cfg: ArchConfig, ecfg: EngineConfig,
                  extra_inputs: Optional[Dict[str, np.ndarray]] = None,
-                 mesh: Optional[Mesh] = None, rules=None):
+                 mesh: Optional[Mesh] = None, rules=None,
+                 draft_params: Optional[PyTree] = None):
         if params is not None:
             # per-token-invariant decode constants (e.g. Mamba2's
             # A = -exp(A_log)) fold into the served tree once at load
@@ -220,6 +257,18 @@ class ServeEngine:
         self._uid = 0
         self._key = jax.random.PRNGKey(ecfg.seed)
         self.mode = self._resolve_mode()
+
+        # side-input geometry is fixed per engine so admission batches
+        # and the slot pools compile once: encdec engines without
+        # supplied enc_embeds run zero encoder rows at a default width
+        enc = self.extra.get("enc_embeds")
+        self._enc_len = (int(np.asarray(enc).shape[1])
+                         if enc is not None and np.asarray(enc).size
+                         else _DEFAULT_ENC_LEN)
+        pe = self.extra.get("patch_embeds")
+        self._patch_len = (int(np.asarray(pe).shape[1])
+                           if cfg.family == "vlm" and pe is not None
+                           and np.asarray(pe).size else 0)
 
         if ecfg.decode_horizon < 1:
             raise ValueError(
@@ -236,12 +285,66 @@ class ServeEngine:
                 "decode_horizon > 1 requires device_loop=True"
             )
         # the device loop is greedy-only (on-device argmax, no RNG
-        # carry); temperature > 0 stays on the host-sampled path
+        # carry); temperature > 0 stays on the host-sampled path, and
+        # speculative decoding has its own draft/verify round loop
         self._use_device_loop = (
             self.mode == "continuous"
             and ecfg.device_loop
             and ecfg.temperature <= 0.0
+            and not ecfg.spec_k
         )
+
+        if ecfg.spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {ecfg.spec_k}")
+        self._spec_k = int(ecfg.spec_k)
+        self.draft_params = None
+        if self._spec_k:
+            dcfg = ecfg.draft_config
+            if dcfg is None or draft_params is None:
+                raise ValueError(
+                    "speculative decoding (spec_k > 0) needs both "
+                    "EngineConfig.draft_config and a draft_params tree"
+                )
+            if self.mode != "continuous":
+                raise ValueError(
+                    f"speculative decoding requires the continuous "
+                    f"scheduler; resolved mode is {self.mode!r}"
+                )
+            if cfg.family not in D._SPEC_FAMILIES:
+                raise ValueError(
+                    f"speculative decoding supports the pure KV-cache "
+                    f"families {D._SPEC_FAMILIES}, got {cfg.family!r}: "
+                    f"recurrent state folds every token and cannot roll "
+                    f"back by a length edit"
+                )
+            if ecfg.temperature > 0.0:
+                raise ValueError(
+                    "speculative decoding is greedy-only (acceptance "
+                    "compares draft proposals with main-model argmaxes); "
+                    "set temperature=0"
+                )
+            if ecfg.decode_horizon != 1:
+                raise ValueError(
+                    "speculative decoding replaces the device horizon "
+                    "loop; set decode_horizon=1"
+                )
+            if dcfg.family != cfg.family:
+                raise ValueError(
+                    f"draft family {dcfg.family!r} must match the target "
+                    f"family {cfg.family!r}"
+                )
+            if dcfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    "draft and target models must share a vocabulary "
+                    f"({dcfg.vocab_size} != {cfg.vocab_size})"
+                )
+            if cfg.family in ("encdec", "vlm") and dcfg.d_model != cfg.d_model:
+                raise ValueError(
+                    "side-input families need draft d_model == target "
+                    "d_model: enc_embeds/patch_embeds rows feed both "
+                    f"models ({dcfg.d_model} != {cfg.d_model})"
+                )
+            self.draft_params = D.hoist_decode_params(draft_params, dcfg)
 
         # multi-device serving: the rules activate around every traced
         # function, so cache slots shard over "data" (via the model's
@@ -268,6 +371,10 @@ class ServeEngine:
         self.cached_prefix_tokens = 0    # prompt tokens served from pages
         self.step_occupancy: List[float] = []
         self.admissions: List[Dict[str, int]] = []   # {step, uid, slot}
+        # speculative decoding telemetry
+        self.spec_rounds = 0
+        self.spec_proposed = 0           # draft tokens put up for verify
+        self.spec_accepted = 0           # draft tokens the verify kept
 
         # hwmodel-in-the-loop energy accounting: one pass over the served
         # tree at construction collects every MVM shape + its pack-time
@@ -299,11 +406,20 @@ class ServeEngine:
                     "it through the contiguous continuous scheduler "
                     "(paged=False)"
                     if cfg.family in _RECURRENT_FAMILIES else
-                    "per-request side inputs force the static scheduler"
+                    "cross-attention KV has no pages — serve it through "
+                    "the contiguous continuous scheduler (paged=False)"
                 )
                 raise ValueError(
                     f"paged KV cache supports attention-KV families "
                     f"{D._PAGED_FAMILIES}, got {cfg.family!r}: {reason}"
+                )
+            if cfg.family == "vlm" and "patch_embeds" in self.extra:
+                raise ValueError(
+                    "paged KV cache does not take per-request "
+                    "patch_embeds: the radix prefix index keys on token "
+                    "ids alone, so a reused prefix page could alias "
+                    "another request's patch context; serve through the "
+                    "contiguous continuous scheduler (paged=False)"
                 )
             if self.mode != "continuous":
                 raise ValueError(
@@ -383,12 +499,14 @@ class ServeEngine:
         # rows are scattered into the long-lived slot cache afterwards.
         # Per-row true lengths ride along so recurrent-state families
         # return exact final states under right-padding (attention
-        # families need only the causal mask and ignore them).
-        def _prefill_bucket(p, toks, lens):
+        # families need only the causal mask and ignore them). The batch
+        # dict may carry side inputs (enc_embeds/patch_embeds rows
+        # gathered per request): one compile per (bucket shapes, side
+        # keys) combination, both fixed per engine.
+        def _prefill_bucket(p, b):
             with self._ctx():
                 return D.prefill(
-                    p, cfg, {"tokens": toks, "lengths": lens},
-                    toks.shape[1], dtype=jnp.float32
+                    p, cfg, b, b["tokens"].shape[1], dtype=jnp.float32
                 )
 
         # donate the cache: in-place dynamic-update-slice instead of a
@@ -421,6 +539,59 @@ class ServeEngine:
         self._decode_multi = jax.jit(
             _decode_multi, donate_argnums=(1,), static_argnums=(6,))
 
+        # speculative decoding: draft prefill/propose + main-model
+        # verify, plus the tiny length-edit that IS the rollback
+        self._draft_cache = None
+        if self._spec_k:
+            dcfg = ecfg.draft_config
+
+            def _draft_prefill(p, b):
+                with self._ctx():
+                    return D.prefill(p, dcfg, b, b["tokens"].shape[1],
+                                     dtype=jnp.float32)
+
+            def _draft_insert(dst, src, row, slot, ln):
+                with self._ctx():
+                    return D.cache_insert(dst, src, row, slot, ln)
+
+            def _draft_propose(p, cache, last, live, k_steps):
+                with self._ctx():
+                    return D.decode_propose(p, dcfg, cache, last, live,
+                                            k_steps)
+
+            # verify tokens are [pending, d1 .. d_{k-1}]: the last draft
+            # proposal exists only to keep the draft cache one position
+            # ahead (decode_propose), so props[:, :-1] drops it
+            def _verify(p, cache, last, props):
+                with self._ctx():
+                    toks = jnp.concatenate(
+                        [last[:, None], props[:, :-1]], axis=1)
+                    return D.decode_verify(p, cfg, toks, cache)
+
+            def _set_len(cache, lens):
+                return {**cache, "length": lens}
+
+            self._draft_prefill = jax.jit(_draft_prefill)
+            self._draft_insert = jax.jit(_draft_insert, donate_argnums=(0,))
+            self._draft_propose = jax.jit(
+                _draft_propose, donate_argnums=(1,), static_argnums=(4,))
+            self._verify = jax.jit(_verify, donate_argnums=(1,))
+            self._set_len = jax.jit(_set_len, donate_argnums=(0,))
+            if ecfg.paged:
+                def _verify_paged(p, cache, bt, live, last, props):
+                    with self._ctx():
+                        toks = jnp.concatenate(
+                            [last[:, None], props[:, :-1]], axis=1)
+                        logits, kv_new = D.prefill_paged_suffix(
+                            p, cfg, toks, cache, bt, cache["length"],
+                            per_token_ffn=True)
+                        kv = D.paged_verify_commit(
+                            cache["kv"], kv_new, cache["length"], bt, live)
+                        return logits, {**cache, "kv": kv}
+
+                self._verify_paged = jax.jit(
+                    _verify_paged, donate_argnums=(1,))
+
     def _ctx(self):
         """Rules-activation context entered at trace time (and for the
         eager slot-pool construction)."""
@@ -431,48 +602,48 @@ class ServeEngine:
     def _resolve_mode(self) -> str:
         mode = self.ecfg.mode
         if mode == "auto":
-            if (self.cfg.family in _CONTINUOUS_FAMILIES
-                    and "patch_embeds" not in self.extra
-                    and "enc_embeds" not in self.extra):
-                return "continuous"
-            return "static"
-        if mode == "continuous":
-            if self.cfg.family not in _CONTINUOUS_FAMILIES:
-                raise ValueError(
-                    f"continuous batching supports {_CONTINUOUS_FAMILIES}, "
-                    f"got {self.cfg.family!r} (per-request side inputs are "
-                    f"batch-positional); use mode='static'"
-                )
-            if self.extra:
-                raise ValueError(
-                    "continuous batching does not take per-request side "
-                    "inputs (enc_embeds/patch_embeds); use mode='static'"
-                )
-            return mode
-        if mode != "static":
+            # every family serves continuously — side inputs included
+            # (admission gathers per-request rows; the slot pool carries
+            # cross-KV / patch-offset state). "auto" always resolves
+            # continuous; "static" remains as an explicit oracle mode.
+            return "continuous"
+        if mode not in ("continuous", "static"):
             raise ValueError(f"unknown engine mode {mode!r}")
         return mode
 
     # -- API ---------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
-               eos_id: Optional[int] = None) -> int:
+               eos_id: Optional[int] = None,
+               extra_idx: Optional[int] = None) -> int:
         """Enqueue a prompt; returns its uid.
 
         ``eos_id=None`` (the default) resolves to
         ``EngineConfig.eos_id``; an explicit per-request value always
-        wins over the config.
+        wins over the config. ``extra_idx`` picks this request's
+        side-input row (enc_embeds/patch_embeds) explicitly; by default
+        rows are positional by submission order (uid 1 -> row 0, ...),
+        which only works when the engine serves at most one row per
+        submit over its lifetime.
         """
         if eos_id is None:
             eos_id = self.ecfg.eos_id
         prompt = np.asarray(prompt, np.int32)
-        if len(prompt) + max_new_tokens > self.ecfg.max_len:
+        # patch positions occupy cache slots below the prompt, and a
+        # speculative verify can write spec_k junk positions past the
+        # final accepted token — both must fit the per-slot capacity so
+        # no KV write is ever clamped
+        overhead = self._patch_len + self._spec_k
+        if overhead + len(prompt) + max_new_tokens > self.ecfg.max_len:
+            extra = (f" + side/spec overhead ({overhead})"
+                     if overhead else "")
             raise ValueError(
-                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens}) "
-                f"exceeds max_len ({self.ecfg.max_len})"
+                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens})"
+                f"{extra} exceeds max_len ({self.ecfg.max_len})"
             )
         self._uid += 1
         r = Request(self._uid, prompt, max_new_tokens, eos_id,
-                    t_enqueue=time.time())
+                    t_enqueue=time.time(),
+                    extra_idx=-1 if extra_idx is None else int(extra_idx))
         self.queue.append(r)
         return r.uid
 
@@ -503,6 +674,9 @@ class ServeEngine:
         self.energy_tokens = 0
         self.step_occupancy = []
         self.admissions = []
+        self.spec_rounds = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
         if self._mgr is not None:
             self._mgr.reset_counters()   # telemetry only; pages/index kept
 
@@ -599,6 +773,15 @@ class ServeEngine:
                            if e is not None else 0.0),
             "mean_occupancy": e["occupancy"] if e is not None else 0.0,
         })
+        if self._spec_k:
+            out.update({
+                "spec_k": self._spec_k,
+                "spec_rounds": self.spec_rounds,
+                "spec_proposed": self.spec_proposed,
+                "spec_accepted": self.spec_accepted,
+                "spec_accept_rate": (self.spec_accepted / self.spec_proposed
+                                     if self.spec_proposed else 0.0),
+            })
         if self._mgr is not None:
             out["paged"] = self._mgr.stats()
         return out
@@ -632,6 +815,22 @@ class ServeEngine:
             lens[i] = len(r.prompt)
         return toks, lens
 
+    def _prefill_batch(self, reqs: List[Request], rows: int,
+                       toks: np.ndarray, lens: np.ndarray) -> Dict:
+        """Build a prefill batch dict, gathering each request's side-input
+        rows (positional by uid, see :meth:`_extra_rows`) when the family
+        takes them. Shapes depend only on (rows, width, side keys), so
+        prefill compiles stay enumerable."""
+        b = {"tokens": jnp.asarray(toks), "lengths": jnp.asarray(lens)}
+        if self.cfg.family == "encdec":
+            b["enc_embeds"] = jnp.asarray(self._extra_rows(
+                "enc_embeds", reqs, rows,
+                (self._enc_len, self.cfg.d_model)))
+        if self.cfg.family == "vlm" and "patch_embeds" in self.extra:
+            b["patch_embeds"] = jnp.asarray(
+                self._extra_rows("patch_embeds", reqs, rows, None))
+        return b
+
     def _admit(self, cache, slots: List[Optional[Request]],
                last_tok: np.ndarray, free: List[int]):
         """Fill free slots from the queue with one bucketed prefill call.
@@ -640,7 +839,12 @@ class ServeEngine:
         bucket (FIFO otherwise), right-pads to (pow2 batch, pow2 length)
         so prefill shapes stay enumerable, samples each row's first token
         from its TRUE last-prompt position, and scatters each row's
-        prefilled KV into its slot.
+        prefilled state — KV, recurrent rows, cross-attention KV — into
+        its slot. Side-input families ride the same path: each request's
+        enc/patch rows join the prefill batch, and a VLM slot's length
+        starts past its patch positions. With speculative decoding on,
+        the draft model prefills the SAME batch and its rows scatter
+        into the draft slot pool in lockstep.
         """
         head = self.queue[0]
         w = self._bucket(len(head.prompt))
@@ -657,8 +861,11 @@ class ServeEngine:
         m = len(take)
         mp = min(_next_pow2(m), self.ecfg.prefill_batch)
         toks, lens = self._right_pad(take, mp, w)
-        logits, pcache = self._prefill_bucket(
-            self.params, jnp.asarray(toks), jnp.asarray(lens))
+        b = self._prefill_batch(take, mp, toks, lens)
+        logits, pcache = self._prefill_bucket(self.params, b)
+        dcache = None
+        if self._spec_k:
+            _, dcache = self._draft_prefill(self.draft_params, b)
         self.prefill_calls += 1
         self.prefill_tokens += sum(len(r.prompt) for r in take)
         self.energy_tokens += sum(len(r.prompt) for r in take)
@@ -675,7 +882,11 @@ class ServeEngine:
                 self._retire(r, now)                 # never occupies a slot
                 continue
             slot = free.pop(0)
-            cache = self._insert(cache, pcache, i, slot, len(r.prompt))
+            ln = self._patch_len + len(r.prompt)
+            cache = self._insert(cache, pcache, i, slot, ln)
+            if dcache is not None:
+                self._draft_cache = self._draft_insert(
+                    self._draft_cache, dcache, i, slot, ln)
             slots[slot] = r
             r.slot = slot
             last_tok[slot] = t
@@ -725,8 +936,10 @@ class ServeEngine:
     def _worst_case_pages(self, r: Request) -> int:
         """Pages ``r`` occupies if it decodes to its full budget: the
         cache length peaks at len(prompt) + max_new_tokens - 1 (the last
-        sampled token is never appended)."""
-        end = len(r.prompt) + r.max_new_tokens - 1
+        sampled token is never appended). A speculative verify round can
+        additionally write spec_k proposal positions past that peak
+        before rolling back, so spec engines budget those pages too."""
+        end = len(r.prompt) + r.max_new_tokens - 1 + self._spec_k
         return -(-end // self.ecfg.block_size)
 
     def _paged_headroom(self, slots: List[Optional[Request]]) -> int:
@@ -791,6 +1004,18 @@ class ServeEngine:
         first = np.asarray(self._sample(logits[:, len(suffix) - 1]))
         self._place_admitted(r, slot, int(first[0]), slots, last_tok,
                              time.time())
+        if self._spec_k and slots[slot] is r:
+            # the draft pool is contiguous and reuses no prefixes: it
+            # prefills the FULL prompt even when the main model only
+            # ran the suffix
+            wf = self._bucket(len(prompt))
+            dt = np.zeros((1, wf), np.int32)
+            dt[0, :len(prompt)] = prompt
+            db = {"tokens": jnp.asarray(dt),
+                  "lengths": jnp.asarray(np.array([len(prompt)], np.int32))}
+            _, dc = self._draft_prefill(self.draft_params, db)
+            self._draft_cache = self._draft_insert(
+                self._draft_cache, dc, 0, slot, len(prompt))
         return cache, True
 
     def _admit_paged_cold(self, cache, slots, last_tok, free):
@@ -842,8 +1067,11 @@ class ServeEngine:
         m = len(placed)
         mp = min(_next_pow2(m), self.ecfg.prefill_batch)
         toks, lens = self._right_pad([r for r, _, _ in placed], mp, w)
-        logits, pcache = self._prefill_bucket(
-            self.params, jnp.asarray(toks), jnp.asarray(lens))
+        b = {"tokens": jnp.asarray(toks), "lengths": jnp.asarray(lens)}
+        logits, pcache = self._prefill_bucket(self.params, b)
+        dcache = None
+        if self._spec_k:
+            _, dcache = self._draft_prefill(self.draft_params, b)
         self.prefill_calls += 1
         self.prefill_tokens += sum(len(r.prompt) for r, _, _ in placed)
         self.energy_tokens += sum(len(r.prompt) for r, _, _ in placed)
@@ -859,11 +1087,15 @@ class ServeEngine:
             self._mgr.register(slot, prompt)
             self._place_admitted(r, slot, int(first[i]), slots, last_tok,
                                  now)
+            if dcache is not None and slots[slot] is r:
+                self._draft_cache = self._draft_insert(
+                    self._draft_cache, dcache, i, slot, len(prompt))
         return cache, True
 
     def _run_continuous(self):
         n = self.ecfg.max_batch
         paged = self.ecfg.paged
+        enc_len = self._enc_len if self.cfg.family == "encdec" else 0
         if paged:
             # persistent pool: pages indexed in an earlier run() still
             # hold their prefilled KV, so the cache outlives the run
@@ -873,7 +1105,16 @@ class ServeEngine:
             # eagerly here, so decode-step donation reuses placed buffers
             with self._ctx():
                 cache = D.cache_init(self.params, self.cfg, n,
-                                     self.ecfg.max_len, dtype=jnp.float32)
+                                     self.ecfg.max_len, dtype=jnp.float32,
+                                     enc_len=enc_len)
+        if self._spec_k:
+            # the draft slot pool is always contiguous (rollback is a
+            # length edit; no prefix reuse) and mirrors the main pool's
+            # slot assignment one-to-one
+            with self._ctx():
+                self._draft_cache = D.cache_init(
+                    self.draft_params, self.ecfg.draft_config, n,
+                    self.ecfg.max_len, dtype=jnp.float32, enc_len=enc_len)
         slots: List[Optional[Request]] = [None] * n
         last_tok = np.zeros((n,), np.int32)
         try:
@@ -905,7 +1146,9 @@ class ServeEngine:
                             f"num_blocks"
                         )
                     continue                         # all admits retired at t=1
-                if self._use_device_loop:
+                if self._spec_k:
+                    cache = self._spec_round(cache, slots, last_tok, paged)
+                elif self._use_device_loop:
                     cache = self._horizon_step(cache, slots, last_tok, paged)
                 else:
                     cache = self._host_step(cache, slots, last_tok, paged)
@@ -1046,20 +1289,119 @@ class ServeEngine:
                     self._mgr.retire(i)
         return cache
 
+    # -- speculative decoding -------------------------------------------------
+    def _spec_round(self, cache, slots: List[Optional[Request]],
+                    last_tok: np.ndarray, paged: bool):
+        """One speculative round: draft proposes, the main model
+        verifies, the longest argmax-matching proposal prefix plus one
+        bonus token is emitted, and both caches roll back to the
+        accepted length.
+
+        The draft runs k+1 masked steps so its cache holds every
+        position a full acceptance needs (``decode_propose``); the
+        verify commits k+1 K/V positions but leaves lengths untouched,
+        so the rollback is the single ``_set_len`` edit at the end
+        (paged: plus ``PagedKVManager.truncate`` page releases). Paged
+        rounds pre-reserve all k+1 positions per live slot BEFORE the
+        verify; if the fresh-page demand exceeds the free list the
+        round runs at width 1 — exactly a vanilla decode step (the
+        admission headroom invariant guarantees one position always
+        fits) — which keeps the draft cache in lockstep under pool
+        pressure. Every emitted token is a main-model argmax at the
+        same cache state vanilla decode would have, so outputs are
+        token-identical to vanilla greedy serving.
+        """
+        n = self.ecfg.max_batch
+        k = self._spec_k
+        live = np.array([s is not None for s in slots])
+        n_live = int(live.sum())
+        t0 = time.time()
+        k_round = k
+        base_len = None
+        if paged:
+            bs = self.ecfg.block_size
+            base_len = [int(self._mgr.lengths[i]) for i in range(n)]
+            need = 0
+            for i, s in enumerate(slots):
+                if s is None:
+                    continue
+                end = base_len[i] + k + 1
+                need += max(0, -(-end // bs)
+                            - len(self._mgr.slot_blocks(i)))
+            if need > self._mgr.pool.free_blocks:
+                k_round = 0
+            for i, s in enumerate(slots):
+                if s is None:
+                    continue
+                for _ in range(k_round + 1):
+                    cow = self._mgr.prepare_append(i)
+                    if cow is not None:
+                        cache = self._copy_page(cache, *cow)
+        live_dev = jnp.asarray(live)
+        last_dev = jnp.asarray(last_tok)
+        props, self._draft_cache = self._draft_propose(
+            self.draft_params, self._draft_cache, last_dev, live_dev,
+            k_round + 1)
+        if paged:
+            logits, cache = self._verify_paged(
+                self.params, cache, jnp.asarray(self._mgr.tables),
+                live_dev, last_dev, props)
+        else:
+            logits, cache = self._verify(self.params, cache, last_dev,
+                                         props)
+        # one host sync per round: the proposals and the verify argmaxes
+        # land together (async dispatch keeps the draft/verify pipelined)
+        m = np.asarray(jnp.argmax(logits, axis=-1))     # (n, k_round+1)
+        props = np.asarray(props)
+        now = time.time()
+        self.host_syncs += 1
+        self.decode_wall_s += now - t0
+        self.decode_steps += 1
+        self.spec_rounds += 1
+        self.step_occupancy.append(n_live / n)
+        for i in range(n):
+            r = slots[i]
+            if r is None:
+                continue
+            a = 0
+            while a < k_round and props[i, a] == m[i, a]:
+                a += 1
+            self.spec_proposed += k_round
+            self.spec_accepted += a
+            for t in m[i, :a + 1]:
+                t = int(t)
+                r.output.append(t)
+                self.energy_tokens += 1
+                last_tok[i] = t
+                if t == r.eos_id or len(r.output) >= r.max_new_tokens:
+                    self._retire(r, now)
+                    slots[i] = None
+                    if paged:
+                        self._mgr.retire(i)
+                    break
+            if paged and slots[i] is not None:
+                self._mgr.truncate(i, base_len[i] + a + 1)
+        # the rollback: both caches' lengths snap to the accepted
+        # position (free slots to 0); junk K/V above the watermark is
+        # never attended and the next round overwrites it in place
+        lens = np.zeros((n,), np.int32)
+        for i, r in enumerate(slots):
+            if r is not None:
+                lens[i] = (self._patch_len + len(r.prompt)
+                           + len(r.output) - 1)
+        lens_dev = jnp.asarray(lens)
+        cache = self._set_len(cache, lens_dev)
+        self._draft_cache = self._set_len(self._draft_cache, lens_dev)
+        return cache
+
     # -- static batching ------------------------------------------------------
-    def _pad_prompts(self, reqs: List[Request]) -> np.ndarray:
-        # left-pad to the longest prompt so last position is the newest token
-        s = max(len(r.prompt) for r in reqs)
-        out = np.zeros((len(reqs), s), np.int32)
-        for i, r in enumerate(reqs):
-            out[i, s - len(r.prompt):] = r.prompt
-        return out
 
     def _extra_rows(self, key: str, reqs: List[Request], bp: int,
                     default_shape) -> np.ndarray:
         """Per-request side-input rows for a static batch.
 
-        Side inputs are positional by submission order (request uid 1 is
+        Rows come from ``Request.extra_idx`` when submit() set one, and
+        are positional by submission order otherwise (request uid 1 is
         row 0, ...). Slicing the head of the array — the old behavior —
         handed EVERY batch the first batch's rows; gathering per request
         keeps later batches on their own inputs. Batch-bucket padding
@@ -1073,14 +1415,16 @@ class ServeEngine:
         for i, r in enumerate(reqs):
             if arr.shape[0] == 0:
                 continue                     # no side inputs: zeros rows
-            if r.uid - 1 >= arr.shape[0]:
+            idx = r.extra_idx if r.extra_idx >= 0 else r.uid - 1
+            if idx >= arr.shape[0]:
                 raise ValueError(
-                    f"request uid {r.uid} has no {key} row: "
+                    f"request uid {r.uid} has no {key} row {idx}: "
                     f"{arr.shape[0]} rows were supplied at engine "
                     f"construction (side inputs are positional by "
-                    f"submission order)"
+                    f"submission order unless submit(extra_idx=...) "
+                    f"picks a row)"
                 )
-            out[i] = arr[r.uid - 1]
+            out[i] = arr[idx]
         return out
 
     def _run_batch(self, reqs: List[Request]):
@@ -1090,83 +1434,61 @@ class ServeEngine:
         # admitted batch size (batch rows are independent everywhere in
         # the model, so padding rows are inert)
         bp = min(_next_pow2(nreq), self.ecfg.max_batch)
-        recurrent = self.cfg.family in _RECURRENT_FAMILIES
-        if recurrent:
-            # RIGHT-pad to a pow2 length bucket + per-row true lengths:
-            # masked recurrent prefill is exact under right-padding
-            # (models/decode.prefill) and decode advances each row at
-            # its own position (vector lengths) — mixed-length static
-            # batches decode bit-exactly with sequential and continuous
-            w = self._bucket(max(len(r.prompt) for r in reqs))
-            tokens, lens = self._right_pad(reqs, bp, w)
-            b = {"tokens": jnp.asarray(tokens), "lengths": jnp.asarray(lens)}
-        else:
-            # attention families keep the classic left-pad: the newest
-            # token sits at the last position for every row
-            tokens = self._pad_prompts(reqs)
-            if bp > nreq:
-                tokens = np.concatenate(
-                    [tokens, np.zeros((bp - nreq, tokens.shape[1]),
-                                      np.int32)]
-                )
-            b = {"tokens": jnp.asarray(tokens)}
-        if self.cfg.family == "encdec":
-            b["enc_embeds"] = jnp.asarray(self._extra_rows(
-                "enc_embeds", reqs, bp, (tokens.shape[1], self.cfg.d_model)))
-        if self.cfg.family == "vlm" and "patch_embeds" in self.extra:
-            b["patch_embeds"] = jnp.asarray(
-                self._extra_rows("patch_embeds", reqs, bp, None))
+        # RIGHT-pad every family to a pow2 length bucket + per-row true
+        # lengths: the causal mask keeps pad columns out of attention,
+        # the lengths make recurrent prefill exact, and decode advances
+        # each row at its own position (vector cache lengths) — so
+        # mixed-length static batches decode bit-exactly with the
+        # sequential and continuous paths. (The historical left-pad
+        # variant was NOT exact for mixed lengths: pad positions sat
+        # inside the causal window and leaked into attention.)
+        w = self._bucket(max(len(r.prompt) for r in reqs))
+        toks, lens = self._right_pad(reqs, bp, w)
+        b = self._prefill_batch(reqs, bp, toks, lens)
         logits, cache = self._prefill_full(self.params, b)
         self.prefill_calls += 1
         self.prefill_tokens += sum(len(r.prompt) for r in reqs)
         self.energy_tokens += sum(len(r.prompt) for r in reqs)
-        if recurrent:
-            # each row's first token comes from its true last position
-            nxt = self._sample(
-                logits[jnp.arange(bp), jnp.maximum(b["lengths"] - 1, 0)])
-        else:
-            nxt = self._sample(logits[:, -1])
+        # each row's first token comes from its true last prompt position
+        nxt = self._sample(
+            logits[jnp.arange(bp), jnp.maximum(b["lengths"] - 1, 0)])
+        first = np.asarray(nxt)
         t_first = time.time()
-        for r, t in zip(reqs, np.asarray(nxt)):
-            r.output.append(int(t))
+        for i, r in enumerate(reqs):
+            t = int(first[i])
+            r.output.append(t)
             r.t_first_token = t_first
-        # attention-family static batches pad to the LONGEST prompt
-        # (VLM: plus patch embeds), so a short prompt's decode budget can
-        # push KV writes past max_len even when every request
-        # individually fits (submit() checks per-request). Cap steps at
-        # remaining cache capacity: truncated output for the over-budget
-        # request, never a clamped write corrupting the cache. Pure
-        # recurrent state has no sequence axis to overflow.
+            if t == r.eos_id or len(r.output) >= r.max_new_tokens:
+                r.done, r.t_done = True, t_first
+        # submit() bounds every request's own writes (side/spec overhead
+        # included), so live rows never clamp; a finished row that keeps
+        # stepping only touches its own junk tail — batch rows are
+        # independent and the cache dies with the batch
         max_new = max(r.max_new_tokens for r in reqs)
-        if self.cfg.family != "ssm":
-            capacity = self.ecfg.max_len - int(np.max(np.asarray(cache["length"])))
-            max_new = min(max_new, capacity + 1)
         for _ in range(max_new - 1):
             # occupancy relative to the slot pool a continuous scheduler
             # would have: retired-but-held and unfilled slots count as idle
             n_alive = sum(
                 not r.done and len(r.output) < r.max_new_tokens for r in reqs
             )
+            if n_alive == 0:
+                break
             self.step_occupancy.append(n_alive / self.ecfg.max_batch)
             logits, cache = self._decode(
                 self.params, jnp.asarray(nxt)[:, None], cache
             )
             self.decode_steps += 1
             nxt = self._sample(logits[:, 0])
+            arr = np.asarray(nxt)
             now = time.time()
-            alive = False
             for i, r in enumerate(reqs):
                 if r.done or len(r.output) >= r.max_new_tokens:
                     continue
-                t = int(np.asarray(nxt)[i])
+                t = int(arr[i])
                 r.output.append(t)
                 self.energy_tokens += 1
                 if t == r.eos_id or len(r.output) >= r.max_new_tokens:
                     r.done, r.t_done = True, now
-                else:
-                    alive = True
-            if not alive:
-                break
         now = time.time()
         for r in reqs:
             r.done = True

@@ -419,6 +419,34 @@ class PagedKVManager:
         self.tables[dst_slot, :] = self.tables[src_slot, :]
         self.lengths[dst_slot] = self.lengths[src_slot]
 
+    def truncate(self, slot: int, new_len: int) -> None:
+        """Roll the slot back to ``new_len`` tokens, releasing surplus pages.
+
+        The speculative-decode rollback: verify pre-reserves ``k + 1``
+        positions via :meth:`prepare_append`; rejected proposals shrink
+        the slot to the accepted length by keeping only the first
+        ``ceil(new_len / block_size)`` pages. Released pages are always
+        the freshly-reserved private tail — rollback targets include the
+        full prompt, and shared prefix pages are full pages *within* the
+        prompt — so this never releases an index-published page out from
+        under another slot (``release`` still balances refcounts if a
+        forked table shares the tail). Partially-filled kept pages hold
+        rejected-token junk above ``new_len``; the next round's writes
+        land exactly there before any read can see it.
+        """
+        if not 0 <= new_len <= int(self.lengths[slot]):
+            raise ValueError(
+                f"truncate target {new_len} outside "
+                f"[0, {int(self.lengths[slot])}] for slot {slot}"
+            )
+        keep = -(-new_len // self.block_size)      # ceil
+        blocks = self._slot_blocks[slot]
+        while len(blocks) > keep:
+            bid = blocks.pop()
+            self.tables[slot, len(blocks)] = TRASH_BLOCK
+            self.pool.release(bid)
+        self.lengths[slot] = new_len
+
     def retire(self, slot: int) -> None:
         """Release every page the slot references; clear its table row."""
         for bid in self._slot_blocks[slot]:

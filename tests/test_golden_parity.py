@@ -49,6 +49,14 @@ GOLDEN_DIR = Path(__file__).parent / "golden"
 ARCHS = ("tinyllama-1.1b", "granite-moe-3b-a800m", "zamba2-7b",
          "xlstm-350m", "whisper-large-v3", "llava-next-mistral-7b")
 PSQ_ARCHS = ("tinyllama-1.1b", "granite-moe-3b-a800m")
+# side-input families: continuous admission scatters per-slot
+# enc-cross-KV / patch pools — pinned against the same golden as the
+# static oracle and one-at-a-time decoding
+SIDE_ARCHS = ("whisper-large-v3", "llava-next-mistral-7b")
+# pure KV-cache families: speculative decoding must reproduce the
+# vanilla golden token for token at every spec_k
+SPEC_ARCHS = ("tinyllama-1.1b", "granite-moe-3b-a800m",
+              "whisper-large-v3", "llava-next-mistral-7b")
 
 MAX_LEN = 48
 MAX_NEW = 6
@@ -79,14 +87,30 @@ def _extra_inputs(cfg, case):
     return {}
 
 
-def _serve(cfg, params, case, mesh=None):
+def _serve(cfg, params, case, mesh=None, mode="auto", max_batch=N_REQ,
+           spec_k=0, draft=None):
+    dcfg, dparams = draft if draft is not None else (None, None)
     eng = ServeEngine(params, cfg,
-                      EngineConfig(max_batch=N_REQ, max_len=MAX_LEN),
-                      extra_inputs=_extra_inputs(cfg, case), mesh=mesh)
-    for p in _case_prompts(case):
-        eng.submit(p, max_new_tokens=MAX_NEW)
+                      EngineConfig(max_batch=max_batch, max_len=MAX_LEN,
+                                   mode=mode, spec_k=spec_k,
+                                   draft_config=dcfg),
+                      extra_inputs=_extra_inputs(cfg, case), mesh=mesh,
+                      draft_params=dparams)
+    for i, p in enumerate(_case_prompts(case)):
+        eng.submit(p, max_new_tokens=MAX_NEW, extra_idx=i)
     done = {r.uid: r.output for r in eng.run()}
     return [done[uid] for uid in sorted(done)]
+
+
+def _draft_model(cfg):
+    """Tiny same-family draft: a 1-layer copy of the served config.
+
+    Randomly initialized, so its proposals rarely match — which makes
+    the golden check strict: acceptance, rejection and rollback all
+    exercise on every trace, and the output STILL must be the vanilla
+    golden."""
+    dcfg = dataclasses.replace(cfg, n_layers=1)
+    return dcfg, init_model(jax.random.PRNGKey(1), dcfg)
 
 
 def _fp_model(arch):
@@ -138,6 +162,46 @@ class TestGoldenParity:
         mesh = jax.make_mesh((1, 1, 4), ("data", "model", "expert"))
         assert _serve(cfg, params, case, mesh=mesh) == case["outputs"], \
             "expert-parallel MoE serving diverged from the golden"
+
+    @pytest.mark.parametrize("arch", SIDE_ARCHS)
+    @pytest.mark.parametrize("mode,mb", [("continuous", N_REQ),
+                                         ("static", N_REQ),
+                                         ("continuous", 1)],
+                             ids=("continuous", "static", "sequential"))
+    def test_side_input_modes_match_golden(self, arch, mode, mb):
+        """encdec/VLM-with-patches on the continuous slot pool, the
+        static oracle loop and one-at-a-time decoding all reproduce the
+        same golden: per-slot side-input pools are bit-exact."""
+        case = _load(arch)
+        cfg, params = _fp_model(arch)
+        assert _serve(cfg, params, case, mode=mode,
+                      max_batch=mb) == case["outputs"], \
+            f"{arch}: {mode} (batch {mb}) diverged from the golden"
+
+    @pytest.mark.skipif(len(jax.devices()) < 2, reason="needs >= 2 devices")
+    @pytest.mark.parametrize("arch", SIDE_ARCHS)
+    def test_side_input_continuous_2way_data_mesh(self, arch):
+        """The per-slot side-input pools shard over ``data`` like every
+        other cache leaf: 2-way data-parallel continuous serving stays
+        on the golden."""
+        case = _load(arch)
+        cfg, params = _fp_model(arch)
+        mesh = jax.make_mesh((2, 1), ("data", "model"))
+        assert _serve(cfg, params, case, mesh=mesh,
+                      mode="continuous") == case["outputs"], \
+            f"{arch}: 2-way data-sharded continuous diverged"
+
+    @pytest.mark.parametrize("arch", SPEC_ARCHS)
+    @pytest.mark.parametrize("spec_k", (2, 4))
+    def test_spec_decode_matches_golden(self, arch, spec_k):
+        """Speculative decoding is token-identical to vanilla greedy by
+        construction — every emitted token is a main-model argmax at the
+        same cache state — so the ONE golden pins it at every spec_k."""
+        case = _load(arch)
+        cfg, params = _fp_model(arch)
+        assert _serve(cfg, params, case, spec_k=spec_k,
+                      draft=_draft_model(cfg)) == case["outputs"], \
+            f"{arch}: spec decode (k={spec_k}) diverged from the golden"
 
     @pytest.mark.parametrize("arch", PSQ_ARCHS)
     @pytest.mark.parametrize("skip", (True, False))

@@ -124,25 +124,27 @@ class TestContinuousScheduling:
         # the pool essentially full
         assert s["mean_slot_occupancy"] > 0.8
 
-    def test_static_batch_caps_decode_at_cache_capacity(self, tiny):
-        """Left-padding to the longest prompt can push a short prompt's
-        decode budget past max_len; the static loop truncates instead of
-        clamp-writing past the end of the KV cache."""
+    def test_static_right_pad_gives_short_prompt_full_budget(self, tiny):
+        """The static path right-pads with per-row lengths, so each row's
+        KV writes are bounded by its OWN prompt + budget (the historical
+        left-pad layout shifted every row to the longest prompt and had
+        to truncate the short one's decode budget)."""
         cfg, params = tiny
         eng = ServeEngine(params, cfg,
                           EngineConfig(max_batch=2, max_len=16,
                                        mode="static"))
         rng = np.random.RandomState(0)
-        uid_a = eng.submit(rng.randint(0, cfg.vocab_size, size=12),
-                           max_new_tokens=2)
-        uid_b = eng.submit(rng.randint(0, cfg.vocab_size, size=2),
-                           max_new_tokens=12)   # fits alone, not padded
+        long_p = rng.randint(0, cfg.vocab_size, size=12)
+        short_p = rng.randint(0, cfg.vocab_size, size=2)
+        uid_a = eng.submit(long_p, max_new_tokens=2)
+        uid_b = eng.submit(short_p, max_new_tokens=12)  # 2 + 12 <= 16
         done = {r.uid: r for r in eng.run()}
         assert len(done[uid_a].output) == 2
-        # padded prompt is 12, so only 16 - 12 = 4 decode writes fit:
-        # 1 prefill token + 4 decoded tokens
-        assert len(done[uid_b].output) == 5
+        assert len(done[uid_b].output) == 12
         assert all(r.done for r in done.values())
+        # and the mixed-length batch is exact, not just full-length
+        assert done[uid_a].output == _greedy_outputs(cfg, params, long_p, 2)
+        assert done[uid_b].output == _greedy_outputs(cfg, params, short_p, 12)
 
     def test_submit_rejects_overlong_request(self, tiny):
         cfg, params = tiny
@@ -314,7 +316,7 @@ class TestModeResolution:
         "llava-next-mistral-7b": "continuous",  # vlm without patch embeds
         "xlstm-350m": "continuous",            # ssm: mLSTM/sLSTM state
         "zamba2-7b": "continuous",             # hybrid: Mamba2 + attn
-        "whisper-large-v3": "static",          # encdec: per-request enc out
+        "whisper-large-v3": "continuous",      # encdec: per-slot cross-KV
     }
 
     @pytest.mark.parametrize("arch,expect", sorted(AUTO.items()))
@@ -346,8 +348,9 @@ class TestModeResolution:
         paged_kw = dict(max_batch=2, max_len=32, paged=True, block_size=16,
                         prefix_reuse=prefix_reuse)
         if cfg.family in ("hybrid", "ssm", "encdec"):
-            # recurrent state has nothing to page; encdec is shut out of
-            # the continuous scheduler entirely — both must say why
+            # recurrent state has nothing to page; encdec cross-KV has
+            # no pages — both must say why (and name the contiguous
+            # continuous scheduler as the way out)
             with pytest.raises(ValueError, match="paged KV cache"):
                 ServeEngine(None, cfg, EngineConfig(**paged_kw), mesh=mesh)
         else:
@@ -361,30 +364,23 @@ class TestModeResolution:
                         EngineConfig(paged=True, max_len=32, block_size=16))
 
     def test_paged_with_side_inputs_raises_scheduler_error(self):
-        # vlm IS a paged family, but patch embeds force static — the
-        # engine must reject the combination, not half-configure pages
+        # vlm IS a paged family, but the radix prefix index keys on
+        # token ids alone, so per-request patch embeds could alias a
+        # reused prefix page — the engine must reject the combination,
+        # not half-configure pages
         cfg = get_config("llava-next-mistral-7b").reduced()
         with pytest.raises(ValueError, match="continuous scheduler"):
             ServeEngine(None, cfg,
                         EngineConfig(paged=True, max_len=32, block_size=16),
                         extra_inputs={"patch_embeds": np.zeros((1, 2, 4))})
 
-    def test_forcing_continuous_on_encdec_raises(self):
-        cfg = get_config("whisper-large-v3").reduced()
-        with pytest.raises(ValueError, match="static"):
-            ServeEngine(None, cfg, EngineConfig(mode="continuous"))
-
-    def test_forcing_continuous_with_side_inputs_raises(self):
+    def test_side_inputs_stay_continuous(self):
+        # patch/enc side inputs ride per-slot pools now: they no longer
+        # force (or even permit forcing back to) the static fallback
         cfg = get_config("llava-next-mistral-7b").reduced()
-        with pytest.raises(ValueError, match="side"):
-            ServeEngine(None, cfg, EngineConfig(mode="continuous"),
-                        extra_inputs={"patch_embeds": np.zeros((1, 2, 4))})
-
-    def test_side_inputs_force_static(self):
-        cfg = get_config("tinyllama-1.1b").reduced()
         eng = ServeEngine(None, cfg, EngineConfig(),
                           extra_inputs={"patch_embeds": np.zeros((1, 2, 4))})
-        assert eng.mode == "static"
+        assert eng.mode == "continuous"
 
     def test_unknown_mode_raises(self):
         cfg = get_config("tinyllama-1.1b").reduced()
