@@ -47,6 +47,24 @@ side-input families (whisper encdec, llava VLM patches) continuous vs
 static. Every entry records accept rate, host syncs and the tokens/s
 ratio, and asserts greedy outputs token-identical across all paths.
 
+The ``streaming`` section replays a seeded Poisson arrival schedule
+through the incremental submit/poll front-end
+(``repro.launch.serve.StreamingFrontend`` over ``ServeEngine.step()``):
+requests arrive mid-flight at exponential inter-arrival gaps (measured
+in scheduler rounds, so the schedule is exactly replayable), and the
+entry records TTFT/TPOT/tokens-per-s UNDER LIVE ARRIVALS — admission
+wait included — rather than the drain-the-queue figures above.
+``--streaming`` runs only this section (plus ``admission``).
+
+The ``admission`` section serves the same trace under both admission
+policies (docs/scheduling.md): ``fcfs`` pow2-bucket waves vs
+``cost-aware``, which prices every request through the engine's
+hwmodel (``EnergyModel.request_cost_pj``) and defers admissions that
+would push the modeled in-flight energy past a pJ cap (set here to
+two worst-case requests, so deferrals are exercised). Greedy outputs
+are asserted token-identical across policies — admission order never
+changes what a request decodes, only when.
+
 Every per-mode entry reports the engine's modeled hwmodel energy
 attribution (``energy_pj``, ``energy_pj_per_request``, ``edap``,
 ``mean_occupancy`` — docs/energy.md). The ``--energy`` section serves
@@ -118,6 +136,21 @@ def make_shared_prefix_trace(
     return trace
 
 
+def make_arrivals(n: int, mean_gap_rounds: float, seed: int = 0) -> List[int]:
+    """Seeded, replayable Poisson arrival schedule.
+
+    Returns the scheduler round at which each of ``n`` requests
+    arrives: exponential inter-arrival gaps with the given mean,
+    cumulated and floored to round indices, shifted so the first
+    request arrives at round 0. Measuring arrivals in scheduler rounds
+    (not wall time) makes the schedule exactly replayable — the same
+    seed produces the same admission pattern on any machine.
+    """
+    rng = np.random.RandomState(seed)
+    t = np.floor(np.cumsum(rng.exponential(mean_gap_rounds, size=n)))
+    return [int(v - t[0]) for v in t]
+
+
 def bench_mode(mode: str, params, cfg, trace, slots: int,
                max_len: int, mesh=None, repeats: int = 1,
                extra_inputs=None, draft_params=None,
@@ -172,6 +205,8 @@ def bench_mode(mode: str, params, cfg, trace, slots: int,
         "energy_pj_per_request": sched["energy_pj_per_request"],
         "edap": sched["edap_total"],
         "mean_occupancy": sched["mean_occupancy"],
+        "admission_policy": sched["admission_policy"],
+        "admission_deferrals": sched["admission_deferrals"],
     }
     if "paged" in sched:
         out["paged"] = sched["paged"]
@@ -179,6 +214,142 @@ def bench_mode(mode: str, params, cfg, trace, slots: int,
         for k in ("spec_k", "spec_rounds", "spec_proposed",
                   "spec_accepted", "spec_accept_rate"):
             out[k] = sched[k]
+    return out
+
+
+def bench_streaming(params, cfg, trace, slots: int, max_len: int,
+                    mean_gap_rounds: float, seed: int = 0) -> Dict:
+    """Live-arrival serving through the incremental submit/poll API.
+
+    Replays the seeded Poisson schedule from :func:`make_arrivals`
+    through ``StreamingFrontend``: each scheduler round first submits
+    every request whose arrival round has come, then advances the
+    engine one ``step()`` and polls the per-request token deltas. TTFT
+    here includes the admission wait a late arrival experiences behind
+    a busy pool — the figure the drain-the-queue sections cannot show.
+    The engine is warmed on the full trace first so the measured pass
+    is steady-state scheduling, not compilation.
+    """
+    from repro.launch.serve import StreamingFrontend
+
+    eng = ServeEngine(params, cfg,
+                      EngineConfig(max_batch=slots, max_len=max_len,
+                                   mode="continuous"))
+    for prompt, mnew in trace:
+        eng.submit(prompt, max_new_tokens=mnew)
+    eng.run()
+    eng.reset_stats()
+
+    arrivals = make_arrivals(len(trace), mean_gap_rounds, seed)
+    fe = StreamingFrontend(eng)
+    uids: List[int] = []
+    first_round: Dict[int, int] = {}
+    rounds, nxt = 0, 0
+    t0 = time.time()
+    while nxt < len(trace) or not fe.drained:
+        while nxt < len(trace) and arrivals[nxt] <= rounds:
+            prompt, mnew = trace[nxt]
+            uids.append(fe.submit(prompt, max_new_tokens=mnew))
+            nxt += 1
+        fe.step()          # no-op on idle rounds before the next arrival
+        rounds += 1
+        for uid in uids:
+            toks, _ = fe.poll(uid)
+            if toks and uid not in first_round:
+                first_round[uid] = rounds
+    wall = time.time() - t0
+    stats = throughput_stats(eng.finished)
+    sched = eng.stats()
+    out = {
+        "arrival_seed": seed,
+        "arrival_mean_gap_rounds": mean_gap_rounds,
+        "arrival_rounds": arrivals,
+        "rounds": rounds,
+        "mean_first_token_round": (
+            float(np.mean([first_round[u] - arrivals[i]
+                           for i, u in enumerate(uids)]))
+            if first_round else 0.0
+        ),
+        "wall_s": wall,
+        "tokens_per_s": stats["tokens_per_s"],
+        "total_tokens": stats["total_tokens"],
+        "mean_ttft_s": stats["mean_ttft_s"],
+        "mean_tpot_s": stats["mean_tpot_s"],
+        "decode_steps": sched["decode_steps"],
+        "prefill_calls": sched["prefill_calls"],
+        "mean_slot_occupancy": sched["mean_slot_occupancy"],
+    }
+    print(f"[serve_bench] streaming (Poisson gap {mean_gap_rounds:.1f} "
+          f"rounds): {out['tokens_per_s']:8.1f} tok/s  "
+          f"ttft {out['mean_ttft_s'] * 1e3:7.1f} ms  "
+          f"rounds {rounds}  "
+          f"first-token wait {out['mean_first_token_round']:.1f} rounds")
+    return out
+
+
+def bench_admission(params, cfg, trace, slots: int, max_len: int) -> Dict:
+    """FCFS vs cost-aware admission under a pJ cap, same trace.
+
+    The cap is set to two worst-case requests (priced through the same
+    ``EnergyModel.request_cost_pj`` the policy consults at admission
+    time), so the cost-aware run must defer admissions while slots are
+    free — the budgeted regime. Greedy outputs are asserted identical:
+    admission order changes WHEN a request decodes, never WHAT.
+    """
+    def serve(policy: str, budget: float):
+        eng = ServeEngine(params, cfg,
+                          EngineConfig(max_batch=slots, max_len=max_len,
+                                       mode="continuous",
+                                       admission_policy=policy,
+                                       energy_budget_pj=budget))
+        for prompt, mnew in trace:
+            eng.submit(prompt, max_new_tokens=mnew)
+        done = eng.run()
+        return eng, {r.uid: list(r.output) for r in done}
+
+    # price the trace through the engine's own hwmodel (no serving:
+    # submit only populates the queue)
+    pricer = ServeEngine(params, cfg,
+                         EngineConfig(max_batch=slots, max_len=max_len,
+                                      mode="continuous"))
+    for prompt, mnew in trace:
+        pricer.submit(prompt, max_new_tokens=mnew)
+    costs = [pricer.energy.request_cost_pj(r) for r in pricer.queue]
+    budget = 2.0 * max(costs) if costs else 0.0
+    if budget <= 0.0:
+        return {"skipped": "model prices every request at 0 pJ"}
+
+    eng_f, toks_f = serve("fcfs", 0.0)
+    eng_c, toks_c = serve("cost-aware", budget)
+    match = toks_f == toks_c
+    out = {
+        "energy_budget_pj": budget,
+        "request_cost_pj": {
+            "min": min(costs), "max": max(costs),
+            "mean": float(np.mean(costs)),
+        },
+        "tokens_match": match,
+    }
+    for name, eng in (("fcfs", eng_f), ("cost_aware", eng_c)):
+        sched = eng.stats()
+        stats = throughput_stats(eng.finished)
+        out[name] = {
+            "policy": sched["admission_policy"],
+            "deferrals": sched["admission_deferrals"],
+            "admissions": sched["admissions"],
+            "tokens_per_s": stats["tokens_per_s"],
+            "mean_ttft_s": stats["mean_ttft_s"],
+            "energy_pj": sched["energy_pj_total"],
+        }
+        print(f"[serve_bench] admission {name:10s}: "
+              f"{out[name]['tokens_per_s']:8.1f} tok/s  "
+              f"deferrals {out[name]['deferrals']:3d}  "
+              f"ttft {out[name]['mean_ttft_s'] * 1e3:7.1f} ms")
+    print(f"[serve_bench] cost-aware cap {budget:.1f} pJ "
+          f"(2x worst request): tokens_match={match}")
+    if not match:
+        raise SystemExit("[serve_bench] admission: cost-aware greedy "
+                         "outputs diverged from fcfs")
     return out
 
 
@@ -605,7 +776,8 @@ def run(args) -> Dict:
         "platform": jax.default_backend(),
         "devices": len(jax.devices()),
     }
-    only_section = args.paged or args.recurrent or args.device_loop
+    only_section = (args.paged or args.recurrent or args.device_loop
+                    or args.streaming)
     if not only_section:
         for mode in ("static", "continuous"):
             result[mode] = bench_mode(mode, params, cfg, trace, slots,
@@ -623,9 +795,21 @@ def run(args) -> Dict:
         print(f"[serve_bench] continuous/static speedup: "
               f"{result['speedup_tokens_per_s']:.2f}x")
 
+    # live-arrival streaming + admission-policy comparison on the same
+    # trace: TTFT/TPOT under a replayable Poisson schedule through the
+    # submit/poll front-end, and fcfs vs cost-aware under a pJ cap
+    if args.streaming or not only_section:
+        mean_gap = 1.0 if args.smoke else 2.0
+        result["streaming"] = dict(
+            requests=n_req, slots=slots, max_len=max_len,
+            **bench_streaming(params, cfg, trace, slots, max_len, mean_gap),
+        )
+        result["admission"] = bench_admission(params, cfg, trace, slots,
+                                              max_len)
+
     # horizon sweep for the on-device decode loop: same trace, same
     # greedy outputs, host syncs cut ~H-fold (docs/serving.md)
-    if not args.paged and not args.recurrent:
+    if not args.paged and not args.recurrent and not args.streaming:
         result["device_loop"] = dict(
             requests=n_req, slots=slots, max_len=max_len,
             **bench_device_loop(params, cfg, trace, slots, max_len),
@@ -634,7 +818,7 @@ def run(args) -> Dict:
     # shared-system-prompt trace on the paged engine: a prefill-heavy
     # regime (long shared prefix, short tails and decode budgets) where
     # radix prefix reuse pays directly in admission latency
-    if not args.recurrent and not args.device_loop:
+    if not args.recurrent and not args.device_loop and not args.streaming:
         if args.smoke:
             pn, pfx, tails, pnew = 8, 24, (2, 6), (2, 4)
             pslots, pmax, pbs = 4, 64, 8
@@ -652,7 +836,7 @@ def run(args) -> Dict:
     # recurrent-state families (hybrid zamba2, xlstm) through the
     # continuous slot pool vs the static fallback — same mixed-length
     # trace per arch, bit-identical outputs, scheduling-only delta
-    if not args.paged and not args.device_loop:
+    if not args.paged and not args.device_loop and not args.streaming:
         result["recurrent_continuous"] = bench_recurrent(args)
 
     # tiny MoE entry in the default section: single-device continuous
@@ -731,6 +915,11 @@ def main() -> None:
     ap.add_argument("--device-loop", action="store_true",
                     help="run only the device-loop horizon sweep "
                          "(decode_horizon 1/8/32)")
+    ap.add_argument("--streaming", action="store_true",
+                    help="run only the live-arrival streaming section "
+                         "(seeded Poisson schedule through the "
+                         "submit/poll front-end) plus the fcfs vs "
+                         "cost-aware admission comparison")
     ap.add_argument("--moe", action="store_true",
                     help="run only the MoE serving section: continuous "
                          "granite-moe single-device vs expert-parallel "

@@ -17,6 +17,7 @@ independent per output column.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Dict, Optional, Tuple
 
@@ -27,7 +28,7 @@ from jax.sharding import Mesh
 
 from repro.core import psq
 from repro.core.config import QuantConfig
-from repro.kernels import registry
+from repro.kernels import occupancy, registry
 from repro.parallel import sharding as shd
 
 Params = Dict[str, jax.Array]
@@ -117,17 +118,25 @@ def serve_linear_tp(
     Falls back to the unsharded forward when the column count does not
     divide the axis (the divisibility story of the rules table).
 
-    Sparsity skipping is disabled per shard: the replicated occupancy
-    metadata describes the GLOBAL column space, so each shard's local
-    ``(K, O/n)`` problem fails the metadata shape guard
-    (:func:`repro.kernels.occupancy.occupancy_for_kernel`) and runs
-    dense — correct by construction; per-shard metadata re-slicing is a
-    follow-up.
+    Sparsity skipping survives the split: the replicated occupancy
+    metadata describes the GLOBAL column space, so it is re-sliced to
+    the local ``(K, O/n)`` problem before entering the mapped trace
+    (:func:`repro.kernels.occupancy.shard_occupancy` — the conservative
+    AND across shard slices, since ``shard_map`` traces once for every
+    device). When the split is not representable (a shard boundary
+    inside a metadata block) the re-slice returns ``None`` and the
+    shape guard (``occupancy_for_kernel``) keeps the shards dense —
+    correct either way, because skipped blocks are all-zero weights.
     """
     n = mesh.shape[axis]
     o = layer.w_codes.shape[-1]
     if o % n != 0:
         return layer.apply_serving(x)
+    socc = occupancy.shard_occupancy(layer.occupancy, n)
+    if socc is not layer.occupancy:
+        # occupancy is pytree aux data: replacing it never touches the
+        # array leaves or their shard specs
+        layer = dataclasses.replace(layer, occupancy=socc)
     # fail fast on an unavailable backend before entering the mapped
     # trace, where the registry error would lose the sharding context
     registry.resolve_backend(layer.cfg)

@@ -199,6 +199,58 @@ def merge_occupancies(occs) -> Optional[ColumnOccupancy]:
     )
 
 
+def shard_occupancy(
+    occ: Optional[ColumnOccupancy], n_shards: int
+) -> Optional[ColumnOccupancy]:
+    """Re-slice global column metadata for an ``n_shards``-way column
+    split, merged conservatively across shards.
+
+    ``shard_map`` traces the tensor-parallel forward ONCE for every
+    device (SPMD), so the per-shard static metadata must be a single
+    object that is *safe for every shard*: shard ``s`` sees global
+    columns ``[s*O/n, (s+1)*O/n)``, and the returned metadata marks a
+    local block skippable only when the corresponding block is zero in
+    ALL shards (logical AND; fractions are the per-shard minimum —
+    exactly :func:`merge_occupancies` over the shard slices).
+
+    Returns ``occ`` unchanged for ``n_shards <= 1`` and ``None`` (the
+    dense path) when the split is not representable: columns that do
+    not divide evenly, or a shard boundary that would cut through a
+    metadata block.
+
+    >>> import numpy as np
+    >>> w = np.zeros((4, 8)); w[:, 0] = 1            # block 0 dense
+    >>> occ = column_occupancy(w, xbar_rows=4, n_w=2, block=2)
+    >>> s = shard_occupancy(occ, 2)                  # local O = 4
+    >>> s.n_cols, s.zero_blocks
+    (4, ((False, True),))
+    >>> shard_occupancy(occ, 3) is None              # 8 % 3 != 0
+    True
+    """
+    if occ is None or n_shards <= 1:
+        return occ
+    if occ.n_cols % n_shards:
+        return None
+    o_local = occ.n_cols // n_shards
+    if o_local % occ.block:
+        return None           # a shard boundary would split a block
+    nbl = o_local // occ.block
+    shards = []
+    for s in range(n_shards):
+        sl = slice(s * nbl, (s + 1) * nbl)
+        shards.append(ColumnOccupancy(
+            n_cols=o_local, n_tiles=occ.n_tiles, n_w=occ.n_w,
+            block=occ.block,
+            zero_blocks=tuple(row[sl] for row in occ.zero_blocks),
+            zero_col_frac=tuple(row[sl] for row in occ.zero_col_frac),
+            plane_zero_frac=tuple(
+                tuple(p[sl] for p in plane)
+                for plane in occ.plane_zero_frac
+            ),
+        ))
+    return merge_occupancies(shards)
+
+
 def kernel_block_flags(
     occ: ColumnOccupancy, block_o: int, o_pad: int
 ) -> np.ndarray:

@@ -21,6 +21,19 @@ proposes K greedy tokens per slot and the main model verifies them in
 one masked forward — token-identical to vanilla greedy decode, see
 docs/serving.md for the lifecycle and rollback rule.
 
+Admission is policy-driven (docs/scheduling.md): ``--admission fcfs``
+(default) is the pow2-bucket FIFO wave; ``--admission cost-aware
+--energy-budget PJ`` budgets in-flight requests against their modeled
+worst-case serve energy (``hwmodel.serve_energy`` — HCiM's pack-time
+occupancy metadata makes the price static), deferring admissions that
+would push the in-flight total past the cap.
+
+``--streaming`` serves the same workload through the incremental
+:class:`StreamingFrontend` (submit/poll over ``ServeEngine.step()``)
+instead of one blocking ``run()``, printing tokens as rounds complete —
+the API the replayable-arrival benchmark drives
+(``benchmarks/serve_bench.py --streaming``).
+
 Multi-device: ``--mesh 1,4`` runs the PSQ datapath tensor-parallel over
 a 4-way ``model`` axis (packed layers column-sharded, one psum per
 matmul) and ``--mesh 4,1`` shards the decode slot pool over ``data``.
@@ -36,6 +49,53 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import math
+from typing import Dict, List, Optional, Tuple
+
+
+class StreamingFrontend:
+    """Incremental submit/poll API over :meth:`ServeEngine.step`.
+
+    The engine's blocking ``run()`` drains everything before returning;
+    this front-end instead advances ONE scheduling round per
+    :meth:`step` call and buffers each request's newly-emitted tokens
+    until the caller :meth:`poll`\\ s them — the shape a network serving
+    layer needs (arrivals between rounds, partial responses out as soon
+    as a round completes). Purely host-side bookkeeping: scheduling,
+    placement and execution stay in the engine layers, so streamed
+    tokens are bit-identical to a drain-the-queue ``run()``.
+    """
+
+    def __init__(self, engine):
+        self.engine = engine
+        self._pending: Dict[int, List[int]] = {}   # undelivered tokens
+        self._finished: set = set()
+
+    def submit(self, prompt, max_new_tokens: int = 16,
+               eos_id: Optional[int] = None,
+               extra_idx: Optional[int] = None) -> int:
+        """Enqueue a prompt mid-flight; returns its uid."""
+        uid = self.engine.submit(prompt, max_new_tokens=max_new_tokens,
+                                 eos_id=eos_id, extra_idx=extra_idx)
+        self._pending[uid] = []
+        return uid
+
+    def step(self) -> None:
+        """Advance one scheduling round (admission + one executor
+        round) and buffer every request's new tokens."""
+        for uid, toks in self.engine.step().items():
+            self._pending.setdefault(uid, []).extend(toks)
+        self._finished.update(r.uid for r in self.engine.finished)
+
+    def poll(self, uid: int) -> Tuple[List[int], bool]:
+        """Drain ``uid``'s tokens emitted since the last poll, plus a
+        finished flag. ``([], True)`` after the final drain."""
+        out = self._pending.get(uid, [])
+        self._pending[uid] = []
+        return out, uid in self._finished
+
+    @property
+    def drained(self) -> bool:
+        return self.engine.drained
 
 
 def _parse_args():
@@ -90,6 +150,19 @@ def _parse_args():
                     help="hwmodel accounting style for the per-request "
                          "energy/EDAP attribution in stats() "
                          "(docs/energy.md)")
+    ap.add_argument("--admission", default="fcfs",
+                    choices=["fcfs", "cost-aware"],
+                    help="admission policy: pow2-bucket FIFO waves, or "
+                         "energy-budgeted admission against the modeled "
+                         "per-request serve energy (docs/scheduling.md)")
+    ap.add_argument("--energy-budget", type=float, default=0.0,
+                    metavar="PJ",
+                    help="in-flight modeled-energy cap in pJ for "
+                         "--admission cost-aware")
+    ap.add_argument("--streaming", action="store_true",
+                    help="serve through the incremental submit/poll "
+                         "front-end (arrivals mid-flight, tokens out "
+                         "per round) instead of one blocking run()")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL[,EXPERT]",
                     help="mesh axis sizes, e.g. 1,4 (model-parallel PSQ "
                          "columns), 2,2, or 1,1,4 (expert-parallel MoE "
@@ -188,15 +261,40 @@ def main():
                      paged=args.paged, block_size=args.block_size,
                      prefix_reuse=not args.no_prefix_reuse,
                      energy_style=args.energy_style,
-                     spec_k=args.spec_k, draft_config=draft_cfg),
+                     spec_k=args.spec_k, draft_config=draft_cfg,
+                     admission_policy=args.admission,
+                     energy_budget_pj=args.energy_budget),
         extra_inputs=extra,
         mesh=mesh,
         draft_params=draft_params,
     )
-    for _ in range(args.requests):
-        eng.submit(rng.randint(0, cfg.vocab_size, size=rng.randint(4, 16)),
-                   max_new_tokens=args.max_new_tokens)
-    done = eng.run()
+    prompts = [rng.randint(0, cfg.vocab_size, size=rng.randint(4, 16))
+               for _ in range(args.requests)]
+    if args.streaming:
+        fe = StreamingFrontend(eng)
+        uids: list = []
+        rounds = 0
+        pending = list(prompts)
+        while pending or not fe.drained:
+            # stagger arrivals: two submits per round exercises
+            # mid-flight admission instead of one up-front wave
+            for p in pending[:2]:
+                uids.append(fe.submit(p, max_new_tokens=args.max_new_tokens))
+            del pending[:2]
+            fe.step()
+            rounds += 1
+            for uid in uids:
+                toks, done_flag = fe.poll(uid)
+                if toks:
+                    print(f"[stream] round {rounds:3d} uid {uid}: "
+                          f"+{len(toks)} tok"
+                          f"{' (done)' if done_flag else ''}")
+        done = eng.finished
+        print(f"[stream] drained after {rounds} rounds")
+    else:
+        for p in prompts:
+            eng.submit(p, max_new_tokens=args.max_new_tokens)
+        done = eng.run()
     stats = throughput_stats(done)
     sched = eng.stats()
     fmt = "psq-packed" if args.psq_packed else ("int4" if args.int4 else "fp")
@@ -205,6 +303,10 @@ def main():
     if args.spec_k:
         print(f"[serve] {args.arch} spec: rounds={sched['spec_rounds']}, "
               f"accept_rate={sched['spec_accept_rate']:.3f}")
+    if args.admission == "cost-aware":
+        print(f"[serve] {args.arch} admission=cost-aware "
+              f"budget={args.energy_budget:.0f} pJ "
+              f"deferrals={sched['admission_deferrals']}")
     print(f"[serve] {args.arch} energy[{sched['energy_style']}]: "
           f"{sched['energy_pj_total']:.1f} pJ total, "
           f"{sched['energy_pj_per_request']:.1f} pJ/request, "

@@ -1,6 +1,14 @@
 """Serving: continuous-batching engine + weight-stationary PSQ cache
 + paged KV cache with shared-prefix reuse.
 
+The stack is layered (docs/architecture.md, docs/scheduling.md):
+``serve/scheduler.py`` owns admission decisions (policies, energy
+pricing, the validated ``EngineConfig``), ``serve/state.py`` owns slot
+placement across the contiguous / paged / recurrent pools, and
+``serve/executor.py`` owns the compiled step functions behind one
+``run_round()`` interface; ``serve/engine.py`` is the facade wiring
+them together.
+
 See docs/serving.md for the engine lifecycle (submit -> bucketed prefill
 -> slot admission -> per-step retirement) and the backend matrix, and
 docs/memory.md for the paged KV layout (block pool, radix prefix index,
@@ -12,8 +20,6 @@ from repro.serve.cache import (  # noqa: F401
     pack_tree_psq,
 )
 from repro.serve.engine import (  # noqa: F401
-    EngineConfig,
-    Request,
     ServeEngine,
     throughput_stats,
 )
@@ -22,4 +28,19 @@ from repro.serve.paged_kv import (  # noqa: F401
     PagedKVManager,
     PoolExhausted,
     RadixPrefixIndex,
+)
+from repro.serve.scheduler import (  # noqa: F401
+    ADMISSION_POLICIES,
+    AdmissionPolicy,
+    CostAwareEnergyBudget,
+    EnergyModel,
+    EngineConfig,
+    Pow2BucketFCFS,
+    Request,
+    resolve_admission_policy,
+)
+from repro.serve.state import (  # noqa: F401
+    ContiguousSlotState,
+    PagedSlotState,
+    SlotState,
 )

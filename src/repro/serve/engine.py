@@ -1,94 +1,30 @@
-"""Continuous-batching serving engine: slot pool + bucketed prefill.
+"""Continuous-batching serving engine — the thin facade over three layers.
 
-Small-scale-runnable (CPU) but structured like a real engine. Two
-scheduling modes share one API:
+The stack is layered (docs/architecture.md, docs/scheduling.md):
+``serve/scheduler.py`` owns decisions (Request/EngineConfig + the one
+``validate()`` home, the AdmissionPolicy protocol with its FCFS and
+cost-aware energy-budget policies, EnergyModel pricing, admitters);
+``serve/state.py`` owns placement (SlotState over the contiguous
+stripe, paged block pool and recurrent leaves); ``serve/executor.py``
+owns execution (``build_compiled`` makes every jitted closure, and the
+host-loop / device-horizon / spec-round / static executors advance the
+pool behind one ``run_round()``). This module wires them together and
+preserves the public API: ``submit()`` then ``run()`` (drain) or
+``step()`` (one round — the streaming front-end in ``launch/serve.py``
+polls incremental tokens between steps), plus ``stats()`` /
+``energy_report()`` / ``throughput_stats``.
 
-``continuous`` (default for KV-cache AND recurrent-state families)
-  * a fixed pool of ``max_batch`` decode slots advances over the WHOLE
-    pool — per-slot lengths in the stacked cache
-    (``models.decode.cache_init``) keep every slot at its own position.
-    Greedy serving runs the on-device horizon loop
-    (``models.decode.decode_multi_step``): ONE jit call takes up to
-    ``decode_horizon`` steps with on-device argmax and per-slot
-    EOS/budget flags, so the host syncs once per horizon instead of
-    once per token (``temperature > 0`` keeps the per-token
-    host-sampled path),
-  * finished sequences (EOS or max tokens) retire at every horizon
-    boundary — mid-horizon they keep executing under a retirement mask
-    that makes their steps cache no-ops — freeing their slot
-    immediately,
-  * queued requests are admitted into free slots at decode-step
-    boundaries: prompts are right-padded to a power-of-two length bucket,
-    prefilled as a batch, and each row's prefilled cache is scattered
-    into its slot (``models.decode.cache_insert``). Attention K/V is
-    exact under right-padding by the causal mask; recurrent state
-    (SSM/xLSTM/hybrid) is exact because prefill threads per-row true
-    lengths into the state scans — pad positions are state no-ops and
-    each row's final state/conv buffer is taken at its true length,
-  * all shapes are fixed after warm-up — the decode step compiles once,
-    prefill/insert compile once per (bucket length, bucket batch) pair,
-    and nothing recompiles afterwards (asserted by the tier-1 suite).
-
-``static`` (an oracle/debug mode, available everywhere)
-  * the classic drain-the-queue loop: one batch prefills together
-    (batch dim pow2-bucketed so compiles stay enumerable) and decodes
-    in lockstep until every member finishes. EVERY family right-pads
-    to a pow2 length bucket with per-row true lengths — the causal
-    mask keeps pad columns out of attention, masked prefill keeps
-    them out of recurrent state — so mixed-length static batches are
-    bit-exact with sequential and continuous decoding.
-
-Per-request side inputs (encdec ``enc_embeds``, VLM ``patch_embeds``)
-serve through BOTH modes: continuous admission gathers each request's
-rows (positional by uid) into the bucketed prefill batch, and the slot
-pool carries an encoder-output cross-KV stripe per slot
-(``models.decode.cache_init(enc_len=...)``) scattered at admission
-exactly like self-attention KV; patch KV is baked into the prompt
-prefill with a per-slot ``patches + prompt`` length offset. Under a
-mesh the side-input pools shard over ``data`` with the other per-slot
-leaves.
-
-Speculative decoding (``EngineConfig.spec_k`` + ``draft_config`` +
-``draft_params``) accelerates greedy continuous serving: a small
-same-family draft model proposes K tokens per slot
-(``models.decode.decode_propose``), the main model scores all K+1
-positions in one masked forward (``models.decode.decode_verify``), and
-the engine accepts the longest proposal prefix matching the main
-model's argmaxes plus one bonus token. Rollback is a per-slot length
-edit on both caches (plus ``PagedKVManager.truncate`` page releases on
-the paged path) — outputs are token-identical to vanilla greedy decode
-by construction, because every emitted token IS a main-model argmax at
-the same cache state.
-
-The continuous scheduler supports two KV layouts
-(``EngineConfig.paged``): the default contiguous per-slot stripe, and
-the paged block pool (``serve/paged_kv.py`` + ``models/decode.py``'s
-``decode_step_paged``) — fixed-size KV pages reached through per-slot
-block tables, with a token-prefix radix index that lets admission reuse
-already-prefilled shared-prefix pages and prefill only the un-cached
-suffix. Retirement releases page refcounts instead of abandoning a
-stripe; reused prefixes cut prefill work without changing greedy
-outputs (docs/memory.md).
-
-PSQ-trained models serve through either mode from the weight-stationary
-``PackedLayer`` cache (``serve.cache.pack_tree_psq``) — quantize + pack
-once at load, stream activations past the packed state on every step:
-the HCiM deployment story on TPU.
-
-Multi-device serving: pass a ``("data", "model")`` mesh and the engine
-activates the logical-axis rules around every traced function — the
-decode slot pool and stacked KV cache shard over ``data`` (per-slot
-state is independent, so slot parallelism is free), packed PSQ layers
-execute tensor-parallel over ``model`` (column split + one psum; see
-``core.psq_linear.serve_linear_tp``), and cache donation is kept across
-shardings so the slot pool still updates in place. Outputs are
-bit-identical to the single-device engine (tested: greedy decode parity
-on 2- and 4-way meshes).
+Both scheduling modes (continuous slot pool; static drain-the-queue
+oracle) are bit-exact with sequential decoding — right-padded pow2
+prefill buckets + per-row true lengths — and all shapes are fixed
+after warm-up so nothing recompiles (asserted by the tier-1 suite).
+Side-input families, speculative decoding, the paged KV layout and
+multi-device meshes all serve through the same facade; see
+docs/serving.md for the matrix.
 """
 from __future__ import annotations
 
 import contextlib
-import dataclasses
 import time
 from typing import Any, Dict, List, Optional
 
@@ -104,141 +40,43 @@ from repro.parallel.sharding import (
     rules_for_mesh,
     shard_expert_params,
 )
+from repro.serve.executor import (
+    DeviceHorizonExecutor,
+    HostLoopExecutor,
+    SpecRoundExecutor,
+    StaticBatchExecutor,
+    build_compiled,
+)
 from repro.serve.paged_kv import PagedKVManager, PoolExhausted
+from repro.serve.scheduler import (
+    ContiguousAdmitter,
+    EngineConfig,
+    EnergyModel,
+    PagedAdmitter,
+    Request,
+    next_pow2,
+    resolve_admission_policy,
+    right_pad,
+)
+from repro.serve.state import ContiguousSlotState, PagedSlotState
 
 PyTree = Any
 
-# families the continuous scheduler admits mid-flight — all of them.
-# KV-cache families are exact under right-padded prefill (causal mask);
-# recurrent-state families (ssm/xlstm/hybrid) are exact because masked
-# prefill makes pad positions state no-ops and returns each row's final
-# state at its TRUE length (models/decode.prefill + per-layer `lengths`
-# masking); side-input families (encdec enc_embeds, VLM patch_embeds)
-# are exact because admission gathers each request's rows (positional
-# by uid) into the prefill batch and scatters the resulting per-request
-# state — cross-attention KV, patch-offset lengths — into the slot pool
-# like any other cache leaf.
+# families the continuous scheduler admits mid-flight — all of them
 _CONTINUOUS_FAMILIES = ("dense", "moe", "vlm", "hybrid", "ssm", "encdec")
 
-# encoder width used for encdec engines constructed WITHOUT
-# extra_inputs["enc_embeds"] (zero encoder rows at a fixed width, so
-# both schedulers agree on the cross-KV pool shape)
+# encoder width for encdec engines built WITHOUT enc_embeds (zero rows
+# at a fixed width, so both schedulers agree on the cross-KV pool shape)
 _DEFAULT_ENC_LEN = 8
 
-# families whose decode state is carried recurrently (no KV sequence
-# axis): slot admission scatters state rows instead of KV stripes, and
-# the static fallback right-pads + tracks per-row lengths so recurrent
-# prefill stays exact under mixed prompt lengths
+# recurrent-state families: admission scatters state rows, not KV stripes
 _RECURRENT_FAMILIES = ("hybrid", "ssm")
 
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray            # (S,) int32
-    max_new_tokens: int = 16
-    eos_id: int = -1              # -1: never
-    # filled by the engine
-    output: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-    t_enqueue: float = 0.0
-    t_first_token: float = 0.0
-    t_done: float = 0.0
-    slot: int = -1                # decode slot served in (continuous mode)
-    extra_idx: int = -1           # side-input row (-1: positional by uid)
-
-
-@dataclasses.dataclass
-class EngineConfig:
-    max_batch: int = 8            # decode slot-pool size (static: batch size)
-    max_len: int = 256            # KV capacity per slot
-    temperature: float = 0.0      # 0 => greedy
-    seed: int = 0
-    mode: str = "auto"            # auto | continuous | static
-    prefill_batch: int = 4        # max requests per bucketed prefill call
-    min_bucket: int = 8           # smallest prompt-length bucket
-    eos_id: int = -1              # default EOS for submit() (-1: never)
-    # on-device multi-step decode (continuous greedy serving only):
-    # one jit call advances every slot up to decode_horizon steps
-    # (models.decode.decode_multi_step) — host syncs per horizon, not
-    # per token. device_loop=False forces the legacy per-token path.
-    decode_horizon: int = 1
-    device_loop: bool = True
-    # paged KV layout (continuous scheduler only; see docs/memory.md)
-    paged: bool = False           # page pool + block tables vs stripes
-    block_size: int = 16          # tokens per KV page (divides max_len)
-    num_blocks: int = 0           # pool pages; 0 => auto (2x slot capacity)
-    prefix_reuse: bool = True     # radix-index shared-prefix reuse
-    paged_attn_backend: Optional[str] = None  # None => inline gather path
-    # hwmodel accounting style for stats()["energy_pj_total"] etc.
-    # (repro.hwmodel.system.serve_energy): adc | quarry | hcim
-    energy_style: str = "hcim"
-    # speculative decoding (continuous greedy serving only): a draft
-    # model proposes spec_k tokens per slot, decode_verify scores them
-    # in one forward, rollback is a per-slot length edit. 0 => off.
-    # draft_params ride in as a ServeEngine constructor argument.
-    spec_k: int = 0
-    draft_config: Optional[ArchConfig] = None
-
-
-def _next_pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
-
-
-def _collect_mvm_layers(node, path: str = "") -> List[tuple]:
-    """Walk a served param tree and list its MVM layers for the hwmodel.
-
-    Returns ``(name, k, o, occupancy_or_None, quant_cfg_or_None)`` per
-    linear — PackedLayer nodes carry their pack-time occupancy metadata
-    and QuantConfig; raw param dicts (fp / QAT trees, key ``"w"`` of rank
-    2 or 3) are modeled dense. Embedding tables (key ``"table"``) are
-    lookups, not MVMs, and are skipped. Stacked rank-3 weights count one
-    layer per leading index (scan-over-layers packs; MoE expert banks are
-    modeled as all-experts-resident, the PUMA weight-stationary story).
-    """
-    out: List[tuple] = []
-    if node is None:
-        return out
-    if hasattr(node, "w_codes"):             # PackedLayer (2-D or stacked)
-        w = node.w_codes
-        if w.ndim == 3:
-            for l in range(int(w.shape[0])):
-                out.append((f"{path}[{l}]", int(w.shape[1]),
-                            int(w.shape[2]), None, node.cfg))
-        else:
-            out.append((path, int(w.shape[0]), int(w.shape[1]),
-                        node.occupancy, node.cfg))
-        return out
-    if isinstance(node, dict):
-        w = node.get("w")
-        if getattr(w, "ndim", 0) in (2, 3) and "table" not in node:
-            if w.ndim == 3:
-                for l in range(int(w.shape[0])):
-                    out.append((f"{path}[{l}]", int(w.shape[1]),
-                                int(w.shape[2]), None, None))
-            else:
-                out.append((path, int(w.shape[0]), int(w.shape[1]),
-                            None, None))
-            return out
-        for k in sorted(node):
-            out.extend(_collect_mvm_layers(node[k], f"{path}/{k}"))
-        return out
-    if isinstance(node, (list, tuple)):
-        for i, v in enumerate(node):
-            out.extend(_collect_mvm_layers(v, f"{path}[{i}]"))
-        return out
-    return out
-
-
 class ServeEngine:
-    """Submit prompts, then :meth:`run` to completion.
-
-    ``stats()`` exposes scheduler counters (decode steps, prefill calls,
-    mean slot occupancy) on top of :func:`throughput_stats`.
-    """
+    """Submit prompts, then :meth:`run` to completion (or :meth:`step`
+    one scheduling round at a time for streaming callers);
+    ``stats()`` exposes scheduler counters on top of throughput."""
 
     def __init__(self, params: PyTree, cfg: ArchConfig, ecfg: EngineConfig,
                  extra_inputs: Optional[Dict[str, np.ndarray]] = None,
@@ -256,11 +94,11 @@ class ServeEngine:
         self.finished: List[Request] = []
         self._uid = 0
         self._key = jax.random.PRNGKey(ecfg.seed)
-        self.mode = self._resolve_mode()
+        # ONE validation pass raises on every invalid knob combination
+        self.mode = ecfg.validate(cfg, has_draft_params=draft_params
+                                  is not None, extra=self.extra)
 
-        # side-input geometry is fixed per engine so admission batches
-        # and the slot pools compile once: encdec engines without
-        # supplied enc_embeds run zero encoder rows at a default width
+        # side-input geometry is fixed per engine so the pools compile once
         enc = self.extra.get("enc_embeds")
         self._enc_len = (int(np.asarray(enc).shape[1])
                          if enc is not None and np.asarray(enc).size
@@ -270,90 +108,23 @@ class ServeEngine:
                            if cfg.family == "vlm" and pe is not None
                            and np.asarray(pe).size else 0)
 
-        if ecfg.decode_horizon < 1:
-            raise ValueError(
-                f"decode_horizon must be >= 1, got {ecfg.decode_horizon}"
-            )
-        if ecfg.decode_horizon > 1 and ecfg.temperature > 0.0:
-            raise ValueError(
-                "decode_horizon > 1 runs the on-device greedy loop; "
-                "temperature sampling needs the per-token host path "
-                "(set decode_horizon=1)"
-            )
-        if ecfg.decode_horizon > 1 and not ecfg.device_loop:
-            raise ValueError(
-                "decode_horizon > 1 requires device_loop=True"
-            )
-        # the device loop is greedy-only (on-device argmax, no RNG
-        # carry); temperature > 0 stays on the host-sampled path, and
-        # speculative decoding has its own draft/verify round loop
+        # the device loop is greedy-only (on-device argmax, no RNG carry);
+        # sampling stays host-side and spec decode has its own round loop
         self._use_device_loop = (
             self.mode == "continuous"
             and ecfg.device_loop
             and ecfg.temperature <= 0.0
             and not ecfg.spec_k
         )
-
-        if ecfg.spec_k < 0:
-            raise ValueError(f"spec_k must be >= 0, got {ecfg.spec_k}")
         self._spec_k = int(ecfg.spec_k)
-        self.draft_params = None
-        if self._spec_k:
-            dcfg = ecfg.draft_config
-            if dcfg is None or draft_params is None:
-                raise ValueError(
-                    "speculative decoding (spec_k > 0) needs both "
-                    "EngineConfig.draft_config and a draft_params tree"
-                )
-            if self.mode != "continuous":
-                raise ValueError(
-                    f"speculative decoding requires the continuous "
-                    f"scheduler; resolved mode is {self.mode!r}"
-                )
-            if cfg.family not in D._SPEC_FAMILIES:
-                raise ValueError(
-                    f"speculative decoding supports the pure KV-cache "
-                    f"families {D._SPEC_FAMILIES}, got {cfg.family!r}: "
-                    f"recurrent state folds every token and cannot roll "
-                    f"back by a length edit"
-                )
-            if ecfg.temperature > 0.0:
-                raise ValueError(
-                    "speculative decoding is greedy-only (acceptance "
-                    "compares draft proposals with main-model argmaxes); "
-                    "set temperature=0"
-                )
-            if ecfg.decode_horizon != 1:
-                raise ValueError(
-                    "speculative decoding replaces the device horizon "
-                    "loop; set decode_horizon=1"
-                )
-            if dcfg.family != cfg.family:
-                raise ValueError(
-                    f"draft family {dcfg.family!r} must match the target "
-                    f"family {cfg.family!r}"
-                )
-            if dcfg.vocab_size != cfg.vocab_size:
-                raise ValueError(
-                    "draft and target models must share a vocabulary "
-                    f"({dcfg.vocab_size} != {cfg.vocab_size})"
-                )
-            if cfg.family in ("encdec", "vlm") and dcfg.d_model != cfg.d_model:
-                raise ValueError(
-                    "side-input families need draft d_model == target "
-                    "d_model: enc_embeds/patch_embeds rows feed both "
-                    f"models ({dcfg.d_model} != {cfg.d_model})"
-                )
-            self.draft_params = D.hoist_decode_params(draft_params, dcfg)
+        self.draft_params = (D.hoist_decode_params(draft_params,
+                                                   ecfg.draft_config)
+                             if self._spec_k else None)
 
-        # multi-device serving: the rules activate around every traced
-        # function, so cache slots shard over "data" (via the model's
-        # constrain() annotations) and packed PSQ layers go tensor-
-        # parallel over "model" (core.psq_linear.serve_linear_tp). With
-        # mesh=None every annotation is a no-op — single-device engine.
-        # A mesh carrying an "expert" axis defaults to the expert-
-        # parallel table (RULES_EXPERT): MoE expert FFN stacks place
-        # over "expert" at load and apply_moe picks its shard_map path.
+        # multi-device serving: rules activate around every traced
+        # function (cache slots shard over "data", packed PSQ layers go
+        # tensor-parallel over "model"; mesh=None = no-op annotations).
+        # An "expert" axis places MoE expert stacks at load.
         self.mesh = mesh
         self._rules = rules if rules is not None else rules_for_mesh(mesh)
         if (mesh is not None and params is not None
@@ -376,61 +147,17 @@ class ServeEngine:
         self.spec_proposed = 0           # draft tokens put up for verify
         self.spec_accepted = 0           # draft tokens the verify kept
 
-        # hwmodel-in-the-loop energy accounting: one pass over the served
-        # tree at construction collects every MVM shape + its pack-time
-        # occupancy metadata; per-token modeled cost is evaluated once
-        # (all hwmodel energy terms are linear in n_vec) and scaled by
-        # the true forward-pass token count at stats() time
-        from repro.hwmodel.system import SERVE_STYLES
-        if ecfg.energy_style not in SERVE_STYLES:
-            raise ValueError(
-                f"unknown energy_style {ecfg.energy_style!r}; "
-                f"choose from {SERVE_STYLES}"
-            )
-        self.energy_tokens = 0           # true tokens through the model
-        self._energy_shapes: List[tuple] = []
-        self._energy_occ: Dict[str, float] = {}
-        self._energy_kw: Dict[str, Any] = {}
-        self._energy_per_token: Optional[Dict[str, Any]] = None
-        self._init_energy_model()
+        # hwmodel energy pricing: admission/executors account through
+        # this ONE hook; the cost-aware policy prices via the same model
+        self.energy = EnergyModel(self.params, ecfg.energy_style)
+        self.policy = resolve_admission_policy(ecfg, self.energy)
 
-        # paged KV layout: host-side pool/table/index bookkeeping plus a
-        # PERSISTENT device page pool — prefix pages indexed in one run
-        # are reused by the next, so the cache must outlive run()
+        # slot-state layer: contiguous stripes or the paged block pool
+        # (PERSISTENT — prefix pages indexed in one run() feed the next)
         self._mgr = None
-        self._kv_cache = None
+        self._cache = None
+        self._draft_cache = None
         if ecfg.paged:
-            if cfg.family not in D._PAGED_FAMILIES:
-                reason = (
-                    "recurrent state has no sequence axis to page — serve "
-                    "it through the contiguous continuous scheduler "
-                    "(paged=False)"
-                    if cfg.family in _RECURRENT_FAMILIES else
-                    "cross-attention KV has no pages — serve it through "
-                    "the contiguous continuous scheduler (paged=False)"
-                )
-                raise ValueError(
-                    f"paged KV cache supports attention-KV families "
-                    f"{D._PAGED_FAMILIES}, got {cfg.family!r}: {reason}"
-                )
-            if cfg.family == "vlm" and "patch_embeds" in self.extra:
-                raise ValueError(
-                    "paged KV cache does not take per-request "
-                    "patch_embeds: the radix prefix index keys on token "
-                    "ids alone, so a reused prefix page could alias "
-                    "another request's patch context; serve through the "
-                    "contiguous continuous scheduler (paged=False)"
-                )
-            if self.mode != "continuous":
-                raise ValueError(
-                    f"paged KV cache requires the continuous scheduler; "
-                    f"resolved mode is {self.mode!r}"
-                )
-            if ecfg.max_len % ecfg.block_size:
-                raise ValueError(
-                    f"max_len ({ecfg.max_len}) must be a multiple of "
-                    f"block_size ({ecfg.block_size})"
-                )
             mb = ecfg.max_len // ecfg.block_size
             nb = ecfg.num_blocks or (1 + 2 * ecfg.max_batch * mb)
             if mesh is not None:
@@ -440,157 +167,44 @@ class ServeEngine:
                 ecfg.max_batch, ecfg.block_size, nb, mb,
                 prefix_reuse=ecfg.prefix_reuse,
             )
-            with self._ctx():
-                self._kv_cache = D.paged_cache_init(
-                    params, cfg, ecfg.max_batch, ecfg.max_len,
-                    ecfg.block_size, nb, dtype=jnp.float32,
-                )
+            self.state = PagedSlotState(self, self._mgr)
+            self._cache = self.state.init_pool()
+            self.admitter = PagedAdmitter(self)
+        else:
+            self.state = ContiguousSlotState(self)
+            self.admitter = ContiguousAdmitter(self)
 
-            def _decode_paged(p, tok, cache, bt):
-                with self._ctx():
-                    return D.decode_step_paged(
-                        p, cfg, tok, cache, bt,
-                        attn_backend=ecfg.paged_attn_backend,
-                    )
-
-            def _insert_paged(cache, src_kv, row, slot, slot_row, start,
-                              total):
-                with self._ctx():
-                    return D.paged_cache_insert(
-                        cache, src_kv, row, slot, slot_row, start, total
-                    )
-
-            def _prefill_suffix(p, toks, cache, slot_row, plen):
-                with self._ctx():
-                    return D.prefill_paged_suffix(
-                        p, cfg, toks, cache, slot_row, plen
-                    )
-
-            def _copy_page(cache, src, dst):
-                # copy-on-write: duplicate one page across all layers
-                kv = cache["kv"]
-                return {**cache, "kv": {
-                    "k": kv["k"].at[:, dst].set(kv["k"][:, src]),
-                    "v": kv["v"].at[:, dst].set(kv["v"][:, src]),
-                }}
-
-            def _decode_multi_paged(p, cache, bt, last, live, eos, budget,
-                                    horizon):
-                with self._ctx():
-                    return D.decode_multi_step_paged(
-                        p, cfg, cache, bt, last, live, eos, budget,
-                        horizon, attn_backend=ecfg.paged_attn_backend,
-                    )
-
-            self._decode_paged = jax.jit(_decode_paged, donate_argnums=(2,))
-            self._insert_paged = jax.jit(_insert_paged, donate_argnums=(0,))
-            self._prefill_suffix = jax.jit(_prefill_suffix)
-            self._copy_page = jax.jit(_copy_page, donate_argnums=(0,))
-            # horizon is static: one compile per horizon value
-            self._decode_multi_paged = jax.jit(
-                _decode_multi_paged, donate_argnums=(1,), static_argnums=(7,))
-
-        # static path: prefill allocates the full decode-capacity cache
-        def _prefill_full(p, b):
-            with self._ctx():
-                return D.prefill(p, cfg, b, ecfg.max_len, dtype=jnp.float32)
-
-        # continuous path: prefill only covers the prompt bucket — the
-        # rows are scattered into the long-lived slot cache afterwards.
-        # Per-row true lengths ride along so recurrent-state families
-        # return exact final states under right-padding (attention
-        # families need only the causal mask and ignore them). The batch
-        # dict may carry side inputs (enc_embeds/patch_embeds rows
-        # gathered per request): one compile per (bucket shapes, side
-        # keys) combination, both fixed per engine.
-        def _prefill_bucket(p, b):
-            with self._ctx():
-                return D.prefill(
-                    p, cfg, b, b["tokens"].shape[1], dtype=jnp.float32
-                )
-
-        # donate the cache: in-place dynamic-update-slice instead of a
-        # full slot-pool copy per decode step / admission (same trick as
-        # launch/dryrun.py's decode cells) — donation survives sharding
-        # because in/out slot-pool leaves keep the same NamedSharding
-        def _decode(p, tok, cache):
-            with self._ctx():
-                return D.decode_step(p, cfg, tok, cache)
-
-        def _insert(dst, src, row, slot, ln):
-            with self._ctx():
-                return D.cache_insert(dst, src, row, slot, ln)
-
-        # the on-device horizon loop: up to `horizon` greedy steps per
-        # call, cache donated across the whole loop
-        def _decode_multi(p, cache, last, live, eos, budget, horizon):
-            with self._ctx():
-                return D.decode_multi_step(
-                    p, cfg, cache, last, live, eos, budget, horizon
-                )
-
-        # fresh closures per engine so compile-cache accounting
-        # (_cache_size) is per-instance, not shared module-level state
-        self._prefill_full = jax.jit(_prefill_full)
-        self._prefill_bucket = jax.jit(_prefill_bucket)
-        self._decode = jax.jit(_decode, donate_argnums=(2,))
-        self._insert = jax.jit(_insert, donate_argnums=(0,))
-        # horizon is static: one compile per horizon value
-        self._decode_multi = jax.jit(
-            _decode_multi, donate_argnums=(1,), static_argnums=(6,))
-
-        # speculative decoding: draft prefill/propose + main-model
-        # verify, plus the tiny length-edit that IS the rollback
-        self._draft_cache = None
+        # executor layer: every jitted closure in one builder, assigned
+        # to the attribute names the compile-count suite introspects
+        fns = build_compiled(self)
+        self._prefill_full = fns.prefill_full
+        self._prefill_bucket = fns.prefill_bucket
+        self._decode = fns.decode
+        self._insert = fns.insert
+        self._decode_multi = fns.decode_multi
+        if ecfg.paged:
+            self._decode_paged = fns.decode_paged
+            self._insert_paged = fns.insert_paged
+            self._prefill_suffix = fns.prefill_suffix
+            self._copy_page = fns.copy_page
+            self._decode_multi_paged = fns.decode_multi_paged
         if self._spec_k:
-            dcfg = ecfg.draft_config
-
-            def _draft_prefill(p, b):
-                with self._ctx():
-                    return D.prefill(p, dcfg, b, b["tokens"].shape[1],
-                                     dtype=jnp.float32)
-
-            def _draft_insert(dst, src, row, slot, ln):
-                with self._ctx():
-                    return D.cache_insert(dst, src, row, slot, ln)
-
-            def _draft_propose(p, cache, last, live, k_steps):
-                with self._ctx():
-                    return D.decode_propose(p, dcfg, cache, last, live,
-                                            k_steps)
-
-            # verify tokens are [pending, d1 .. d_{k-1}]: the last draft
-            # proposal exists only to keep the draft cache one position
-            # ahead (decode_propose), so props[:, :-1] drops it
-            def _verify(p, cache, last, props):
-                with self._ctx():
-                    toks = jnp.concatenate(
-                        [last[:, None], props[:, :-1]], axis=1)
-                    return D.decode_verify(p, cfg, toks, cache)
-
-            def _set_len(cache, lens):
-                return {**cache, "length": lens}
-
-            self._draft_prefill = jax.jit(_draft_prefill)
-            self._draft_insert = jax.jit(_draft_insert, donate_argnums=(0,))
-            self._draft_propose = jax.jit(
-                _draft_propose, donate_argnums=(1,), static_argnums=(4,))
-            self._verify = jax.jit(_verify, donate_argnums=(1,))
-            self._set_len = jax.jit(_set_len, donate_argnums=(0,))
+            self._draft_prefill = fns.draft_prefill
+            self._draft_insert = fns.draft_insert
+            self._draft_propose = fns.draft_propose
+            self._verify = fns.verify
+            self._set_len = fns.set_len
             if ecfg.paged:
-                def _verify_paged(p, cache, bt, live, last, props):
-                    with self._ctx():
-                        toks = jnp.concatenate(
-                            [last[:, None], props[:, :-1]], axis=1)
-                        logits, kv_new = D.prefill_paged_suffix(
-                            p, cfg, toks, cache, bt, cache["length"],
-                            per_token_ffn=True)
-                        kv = D.paged_verify_commit(
-                            cache["kv"], kv_new, cache["length"], bt, live)
-                        return logits, {**cache, "kv": kv}
+                self._verify_paged = fns.verify_paged
 
-                self._verify_paged = jax.jit(
-                    _verify_paged, donate_argnums=(1,))
+        if self.mode == "static":
+            self.executor = StaticBatchExecutor(self)
+        elif self._spec_k:
+            self.executor = SpecRoundExecutor(self)
+        elif self._use_device_loop:
+            self.executor = DeviceHorizonExecutor(self)
+        else:
+            self.executor = HostLoopExecutor(self)
 
     def _ctx(self):
         """Rules-activation context entered at trace time (and for the
@@ -599,39 +213,18 @@ class ServeEngine:
             return contextlib.nullcontext()
         return axis_rules(self._rules, self.mesh)
 
-    def _resolve_mode(self) -> str:
-        mode = self.ecfg.mode
-        if mode == "auto":
-            # every family serves continuously — side inputs included
-            # (admission gathers per-request rows; the slot pool carries
-            # cross-KV / patch-offset state). "auto" always resolves
-            # continuous; "static" remains as an explicit oracle mode.
-            return "continuous"
-        if mode not in ("continuous", "static"):
-            raise ValueError(f"unknown engine mode {mode!r}")
-        return mode
-
     # -- API ---------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                eos_id: Optional[int] = None,
                extra_idx: Optional[int] = None) -> int:
-        """Enqueue a prompt; returns its uid.
-
-        ``eos_id=None`` (the default) resolves to
-        ``EngineConfig.eos_id``; an explicit per-request value always
-        wins over the config. ``extra_idx`` picks this request's
-        side-input row (enc_embeds/patch_embeds) explicitly; by default
-        rows are positional by submission order (uid 1 -> row 0, ...),
-        which only works when the engine serves at most one row per
-        submit over its lifetime.
-        """
+        """Enqueue a prompt; returns its uid. ``eos_id=None`` resolves
+        to ``EngineConfig.eos_id``; ``extra_idx`` picks the request's
+        side-input row (default: positional by submission order)."""
         if eos_id is None:
             eos_id = self.ecfg.eos_id
         prompt = np.asarray(prompt, np.int32)
-        # patch positions occupy cache slots below the prompt, and a
-        # speculative verify can write spec_k junk positions past the
-        # final accepted token — both must fit the per-slot capacity so
-        # no KV write is ever clamped
+        # patch rows sit below the prompt and a verify can write spec_k
+        # junk positions — both must fit so no KV write is ever clamped
         overhead = self._patch_len + self._spec_k
         if overhead + len(prompt) + max_new_tokens > self.ecfg.max_len:
             extra = (f" + side/spec overhead ({overhead})"
@@ -647,23 +240,88 @@ class ServeEngine:
         self.queue.append(r)
         return r.uid
 
+    @property
+    def drained(self) -> bool:
+        """True when nothing is queued or in flight — the streaming
+        front-end's idle signal."""
+        return not self.queue and not self.state.any_live
+
+    def step(self) -> Dict[int, List[int]]:
+        """One continuous scheduling round: admit at the boundary, run
+        one executor round, return the tokens each touched request
+        gained (``{uid: [new tokens...]}``) for streaming pollers.
+        A no-op (empty dict) when nothing is queued or live."""
+        if self.mode != "continuous":
+            raise ValueError("step() requires the continuous scheduler; "
+                             "static mode only drains through run()")
+        if self.drained:
+            return {}
+        self._start()                    # idempotent pool allocation
+        before = {r.uid: (r, len(r.output)) for r in self.queue}
+        for r in self.state.slots:
+            if r is not None:
+                before[r.uid] = (r, len(r.output))
+        # admission at the round boundary. `stalled` breaks when the
+        # pool/budget can't take the queue head — retirement frees both,
+        # so fall through to the executor rather than spin here.
+        stalled = False
+        while self.queue and not stalled:
+            free = self.state.free()
+            if not free:
+                break
+            stalled = not self.admitter.admit(free)
+        if self.state.any_live:
+            self.executor.run_round()
+        elif stalled:
+            # nothing live to retire: the pool can never hold the
+            # queue head — surface it instead of spinning forever
+            raise PoolExhausted(
+                f"page pool ({self._mgr.pool.num_blocks} "
+                f"blocks) cannot hold the queue head's "
+                f"prompt plus its decode budget with no "
+                f"live slots left to retire; raise "
+                f"num_blocks"
+            )
+        # else: all admits retired at t=1 — their first tokens are the
+        # round's only deltas
+        return {uid: r.output[n:] for uid, (r, n) in before.items()
+                if len(r.output) > n}
+
     def run(self) -> List[Request]:
         """Serve every queued request to completion; returns them with
         outputs (continuous: per-step retirement + mid-flight admission;
         static: fixed batches decoded in lockstep)."""
         if self.mode == "continuous":
-            self._run_continuous()
+            while not self.drained:
+                self.step()
         else:
             while self.queue:
                 batch = self.queue[: self.ecfg.max_batch]
                 self.queue = self.queue[self.ecfg.max_batch:]
-                self._run_batch(batch)
+                self.executor.run_batch(batch)
         return self.finished
 
+    def _start(self) -> None:
+        """Allocate the contiguous pools lazily (the paged pool lives in
+        ``__init__``); junk above the length watermark is never read, so
+        one pool serves every run. Under a mesh a drained pool is
+        re-placed eagerly: donated decode outputs carry XLA-canonicalized
+        shardings that would retrace the warm insert closures."""
+        fresh = self.mesh is not None and not self.state.any_live
+        if self._cache is None or (fresh and not self.ecfg.paged):
+            self._cache = self.state.init_pool()
+        if self._spec_k and (self._draft_cache is None or fresh):
+            # draft pool: always contiguous, mirrors slot assignment 1:1
+            enc_len = self._enc_len if self.cfg.family == "encdec" else 0
+            with self._ctx():
+                self._draft_cache = D.cache_init(
+                    self.draft_params, self.ecfg.draft_config,
+                    self.ecfg.max_batch, self.ecfg.max_len,
+                    dtype=jnp.float32, enc_len=enc_len)
+
     def reset_stats(self) -> None:
-        """Clear finished requests + scheduler telemetry (keeps compiled
-        functions warm AND the paged prefix index populated) — so
-        benchmarks can measure a post-warm-up run."""
+        """Clear finished requests + telemetry, keeping compiled fns
+        warm and the paged prefix index populated (post-warm-up runs)."""
         self.finished = []
         self.decode_steps = 0
         self.host_syncs = 0
@@ -671,74 +329,43 @@ class ServeEngine:
         self.prefill_calls = 0
         self.prefill_tokens = 0
         self.cached_prefix_tokens = 0
-        self.energy_tokens = 0
+        self.energy.reset()
         self.step_occupancy = []
         self.admissions = []
         self.spec_rounds = 0
         self.spec_proposed = 0
         self.spec_accepted = 0
+        if hasattr(self.policy, "deferrals"):
+            self.policy.deferrals = 0
         if self._mgr is not None:
             self._mgr.reset_counters()   # telemetry only; pages/index kept
 
     def reset_counters(self) -> None:
-        """Alias for :meth:`reset_stats` — matches the paged-KV manager's
-        counter-reset naming so callers can treat engine and manager
-        telemetry uniformly."""
+        """Alias for :meth:`reset_stats` (paged-KV manager naming)."""
         self.reset_stats()
 
-    def _init_energy_model(self) -> None:
-        from repro.hwmodel.system import serve_energy
+    # -- accounting hooks (the single energy/prefill attribution sites) ----
+    def account_prefill(self, n_tokens: int) -> None:
+        """One prefill call ran ``n_tokens`` TRUE prompt tokens (reused
+        prefix pages cost nothing and are not reported here)."""
+        self.prefill_calls += 1
+        self.prefill_tokens += n_tokens
+        self.energy.add(n_tokens)
 
-        mvms = _collect_mvm_layers(self.params)
-        if not mvms:
-            return
-        self._energy_shapes = [(name, k, o, 1) for name, k, o, _, _ in mvms]
-        self._energy_occ = {
-            name: (occ.mean_zero_fraction if occ is not None else 0.0)
-            for name, _, _, occ, _ in mvms
-        }
-        qcfg = next((c for _, _, _, _, c in mvms if c is not None), None)
-        if qcfg is not None:
-            self._energy_kw = dict(
-                xbar_rows=qcfg.xbar_rows,
-                n_bits_a=qcfg.spec.n_bits_a,
-                n_bits_w=qcfg.spec.n_bits_w,
-                n_bits_sf=qcfg.spec.n_bits_sf,
-                adc_bits=qcfg.adc_bits,
-                levels=qcfg.psq_levels,
-            )
-        self._energy_per_token = serve_energy(
-            self._energy_shapes, occupancy=self._energy_occ,
-            style=self.ecfg.energy_style, **self._energy_kw,
-        )
+    def account_decode(self, n_tokens: int) -> None:
+        """A decode round emitted ``n_tokens`` true tokens (masked
+        no-op steps of retired rows excluded)."""
+        self.energy.add(n_tokens)
+
+    @property
+    def energy_tokens(self) -> int:
+        return self.energy.tokens
 
     def energy_report(self, styles=None, occupancy=None) -> Dict[str, Dict]:
-        """Modeled per-style totals for the tokens served so far.
-
-        ``styles`` defaults to all of adc/quarry/hcim; ``occupancy``
-        overrides the measured pack-time occupancy (scalar or
-        ``{layer: fraction}``) for what-if sweeps — the serve_bench
-        energy section uses this to show the hcim-vs-adc reduction
-        across an occupancy grid without re-serving the trace.
-        """
-        from repro.hwmodel.system import SERVE_STYLES, serve_energy
-
-        if not self._energy_shapes:
-            return {}
-        occ = self._energy_occ if occupancy is None else occupancy
-        tok = self.energy_tokens
-        rep: Dict[str, Dict] = {}
-        for s in (styles or SERVE_STYLES):
-            e = serve_energy(self._energy_shapes, occupancy=occ, style=s,
-                             **self._energy_kw)
-            rep[s] = {
-                "energy_pj_per_token": e["energy_pj"],
-                "energy_pj_total": e["energy_pj"] * tok,
-                "edap_total": (e["energy_pj"] * tok) * (e["latency_ns"] * tok)
-                              * e["area_mm2"],
-                "occupancy": e["occupancy"],
-            }
-        return rep
+        """Modeled per-style totals for the tokens served so far;
+        ``occupancy`` overrides the pack-time figure for what-if sweeps
+        without re-serving the trace (the serve_bench energy grid)."""
+        return self.energy.report(styles=styles, occupancy=occupancy)
 
     def stats(self) -> Dict[str, float]:
         occ = float(np.mean(self.step_occupancy)) if self.step_occupancy else 0.0
@@ -756,23 +383,12 @@ class ServeEngine:
             "admissions": len(self.admissions),
             "mesh": (None if self.mesh is None else
                      "x".join(f"{k}={v}" for k, v in self.mesh.shape.items())),
+            "admission_policy": self.policy.name,
+            "admission_deferrals": getattr(self.policy, "deferrals", 0),
         }
         # hwmodel energy attribution (zeros before any token is served,
         # and for trees with no MVM layers)
-        e = self._energy_per_token
-        tok = self.energy_tokens
-        total = e["energy_pj"] * tok if e is not None else 0.0
-        out.update({
-            "energy_style": self.ecfg.energy_style,
-            "energy_tokens": tok,
-            "energy_pj_per_token": e["energy_pj"] if e is not None else 0.0,
-            "energy_pj_total": total,
-            "energy_pj_per_request": (total / len(self.finished)
-                                      if self.finished else 0.0),
-            "edap_total": (total * (e["latency_ns"] * tok) * e["area_mm2"]
-                           if e is not None else 0.0),
-            "mean_occupancy": e["occupancy"] if e is not None else 0.0,
-        })
+        out.update(self.energy.summary(len(self.finished)))
         if self._spec_k:
             out.update({
                 "spec_k": self._spec_k,
@@ -786,40 +402,28 @@ class ServeEngine:
             out["paged"] = self._mgr.stats()
         return out
 
-    # -- shared -------------------------------------------------------------
+    # -- shared helpers used by the scheduler / executor layers -------------
     def _sample(self, logits: jax.Array) -> jax.Array:
         if self.ecfg.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1)
         self._key, sub = jax.random.split(self._key)
         return jax.random.categorical(sub, logits / self.ecfg.temperature)
 
-    # -- continuous batching --------------------------------------------------
     def _bucket(self, n: int) -> int:
-        return min(max(self.ecfg.min_bucket, _next_pow2(n)),
+        return min(max(self.ecfg.min_bucket, next_pow2(n)),
                    self.ecfg.max_len)
 
-    def _retire(self, r: Request, now: float):
+    def _bucket_of(self, r: Request) -> int:
+        return self._bucket(len(r.prompt))
+
+    def _finish(self, r: Request, now: float) -> None:
         r.done, r.t_done = True, now
         self.finished.append(r)
 
-    @staticmethod
-    def _right_pad(reqs: List[Request], rows: int, width: int):
-        """RIGHT-padded token block + true-length vector for a prefill
-        batch: the causal mask keeps pad columns out of attention, the
-        lengths keep them out of recurrent state (models/decode.prefill).
-        Rows beyond ``len(reqs)`` are batch-bucket padding (length 0)."""
-        toks = np.zeros((rows, width), np.int32)
-        lens = np.zeros((rows,), np.int32)
-        for i, r in enumerate(reqs):
-            toks[i, : len(r.prompt)] = r.prompt
-            lens[i] = len(r.prompt)
-        return toks, lens
-
     def _prefill_batch(self, reqs: List[Request], rows: int,
                        toks: np.ndarray, lens: np.ndarray) -> Dict:
-        """Build a prefill batch dict, gathering each request's side-input
-        rows (positional by uid, see :meth:`_extra_rows`) when the family
-        takes them. Shapes depend only on (rows, width, side keys), so
+        """Build a prefill batch dict with each request's side-input
+        rows; shapes depend only on (rows, width, side keys), so
         prefill compiles stay enumerable."""
         b = {"tokens": jnp.asarray(toks), "lengths": jnp.asarray(lens)}
         if self.cfg.family == "encdec":
@@ -831,582 +435,12 @@ class ServeEngine:
                 self._extra_rows("patch_embeds", reqs, rows, None))
         return b
 
-    def _admit(self, cache, slots: List[Optional[Request]],
-               last_tok: np.ndarray, free: List[int]):
-        """Fill free slots from the queue with one bucketed prefill call.
-
-        Takes the queue head plus any later requests sharing its length
-        bucket (FIFO otherwise), right-pads to (pow2 batch, pow2 length)
-        so prefill shapes stay enumerable, samples each row's first token
-        from its TRUE last-prompt position, and scatters each row's
-        prefilled state — KV, recurrent rows, cross-attention KV — into
-        its slot. Side-input families ride the same path: each request's
-        enc/patch rows join the prefill batch, and a VLM slot's length
-        starts past its patch positions. With speculative decoding on,
-        the draft model prefills the SAME batch and its rows scatter
-        into the draft slot pool in lockstep.
-        """
-        head = self.queue[0]
-        w = self._bucket(len(head.prompt))
-        limit = min(len(free), self.ecfg.prefill_batch)
-        take = [head]
-        for r in self.queue[1:]:
-            if len(take) >= limit:
-                break
-            if self._bucket(len(r.prompt)) == w:
-                take.append(r)
-        for r in take:
-            self.queue.remove(r)
-
-        m = len(take)
-        mp = min(_next_pow2(m), self.ecfg.prefill_batch)
-        toks, lens = self._right_pad(take, mp, w)
-        b = self._prefill_batch(take, mp, toks, lens)
-        logits, pcache = self._prefill_bucket(self.params, b)
-        dcache = None
-        if self._spec_k:
-            _, dcache = self._draft_prefill(self.draft_params, b)
-        self.prefill_calls += 1
-        self.prefill_tokens += sum(len(r.prompt) for r in take)
-        self.energy_tokens += sum(len(r.prompt) for r in take)
-        # each row's next token comes from its true last prompt position
-        idx = jnp.asarray([len(r.prompt) - 1 for r in take]
-                          + [0] * (mp - m))
-        first = np.asarray(self._sample(logits[jnp.arange(mp), idx]))
-        now = time.time()
-        for i, r in enumerate(take):
-            r.t_first_token = now
-            t = int(first[i])
-            r.output.append(t)
-            if t == r.eos_id or len(r.output) >= r.max_new_tokens:
-                self._retire(r, now)                 # never occupies a slot
-                continue
-            slot = free.pop(0)
-            ln = self._patch_len + len(r.prompt)
-            cache = self._insert(cache, pcache, i, slot, ln)
-            if dcache is not None:
-                self._draft_cache = self._draft_insert(
-                    self._draft_cache, dcache, i, slot, ln)
-            slots[slot] = r
-            r.slot = slot
-            last_tok[slot] = t
-            self.admissions.append(
-                {"step": self.decode_steps, "uid": r.uid, "slot": slot})
-        return cache
-
-    def _place_admitted(self, r: Request, slot: int, token: int,
-                        slots: List[Optional[Request]],
-                        last_tok: np.ndarray, now: float) -> None:
-        """Record a freshly-admitted request in its slot (or retire it on
-        the spot when the prefill token already finishes it)."""
-        r.t_first_token = now
-        r.output.append(token)
-        if token == r.eos_id or len(r.output) >= r.max_new_tokens:
-            self._retire(r, now)
-            self._mgr.retire(slot)     # pages freed; the prefix stays indexed
-            return
-        slots[slot] = r
-        r.slot = slot
-        last_tok[slot] = token
-        self.admissions.append(
-            {"step": self.decode_steps, "uid": r.uid, "slot": slot})
-
-    def _admit_paged(self, cache, slots: List[Optional[Request]],
-                     last_tok: np.ndarray, free: List[int]):
-        """Admit from the queue into free slots through the radix index.
-
-        A queue head with a cached shared prefix admits alone: the
-        reused pages are ref-bumped into its block table and ONLY the
-        un-cached suffix is prefilled against them
-        (``models.decode.prefill_paged_suffix``). Cold requests batch
-        through the same pow2-bucketed prefill as the contiguous path,
-        then scatter into their private pages. Either way, the prompt's
-        full pages are published to the index for later requests.
-
-        Returns ``(cache, progressed)``. ``progressed=False`` means the
-        page pool could not hold the queue head (``PoolExhausted``
-        rolled the partial allocation back): nothing was admitted, and
-        the caller must STOP admitting and decode instead — retirement
-        frees pages — rather than spin on the same head.
-        """
-        if self._mgr.match_tokens([int(t) for t in self.queue[0].prompt]):
-            return self._admit_paged_suffix(cache, slots, last_tok, free)
-        return self._admit_paged_cold(cache, slots, last_tok, free)
-
-    def _worst_case_pages(self, r: Request) -> int:
-        """Pages ``r`` occupies if it decodes to its full budget: the
-        cache length peaks at len(prompt) + max_new_tokens - 1 (the last
-        sampled token is never appended). A speculative verify round can
-        additionally write spec_k proposal positions past that peak
-        before rolling back, so spec engines budget those pages too."""
-        end = len(r.prompt) + r.max_new_tokens - 1 + self._spec_k
-        return -(-end // self.ecfg.block_size)
-
-    def _paged_headroom(self, slots: List[Optional[Request]]) -> int:
-        """Free pages minus the growth still owed to live slots.
-
-        Admission must budget for decode growth, not just the prompt:
-        admitting on prompt pages alone can deadlock mid-decode when
-        every live slot needs its next page and nothing is retirable.
-        Gating on this headroom keeps the invariant that owed growth
-        always fits the free list, so ``prepare_append`` cannot exhaust
-        the pool between horizon boundaries.
-        """
-        owed = 0
-        for i, s in enumerate(slots):
-            if s is None:
-                continue
-            owed += max(0, self._worst_case_pages(s)
-                        - len(self._mgr.slot_blocks(i)))
-        return self._mgr.pool.free_blocks - owed
-
-    def _admit_paged_suffix(self, cache, slots, last_tok, free):
-        # peek, don't pop: if the pool can't hold the head's pages the
-        # request must stay queued (admit() rolls its allocation back)
-        r = self.queue[0]
-        slot = free[0]
-        prompt = [int(t) for t in r.prompt]
-        # full shared prefix pages are reused; everything else — the
-        # prompt tail AND the decode growth — must fit the headroom
-        cached_probe = self._mgr.match_tokens(prompt)
-        need = (self._worst_case_pages(r)
-                - cached_probe // self.ecfg.block_size)
-        if need > self._paged_headroom(slots):
-            return cache, False
-        try:
-            cached = self._mgr.admit(slot, prompt)
-        except PoolExhausted:
-            return cache, False
-        self.queue.pop(0)
-        free.pop(0)
-        suffix = r.prompt[cached:]
-        w = self._bucket(len(suffix))
-        toks = np.zeros((1, w), np.int32)
-        toks[0, :len(suffix)] = suffix
-        # gather only a pow2 bucket of prefix pages, not the whole
-        # table — suffix attention width scales with the prefix, and
-        # compile count stays one per (suffix, prefix) bucket pair
-        bs = self.ecfg.block_size
-        pb = min(_next_pow2(-(-cached // bs)), len(self._mgr.tables[slot]))
-        logits, src = self._prefill_suffix(
-            self.params, jnp.asarray(toks), cache,
-            jnp.asarray(self._mgr.tables[slot][:pb])[None],
-            np.int32(cached),
-        )
-        self.prefill_calls += 1
-        self.prefill_tokens += len(suffix)
-        self.energy_tokens += len(suffix)   # reused prefix costs nothing
-        self.cached_prefix_tokens += cached
-        cache = self._insert_paged(
-            cache, src, 0, slot, jnp.asarray(self._mgr.tables[slot]),
-            np.int32(cached), len(prompt))
-        self._mgr.register(slot, prompt)
-        first = np.asarray(self._sample(logits[:, len(suffix) - 1]))
-        self._place_admitted(r, slot, int(first[0]), slots, last_tok,
-                             time.time())
-        if self._spec_k and slots[slot] is r:
-            # the draft pool is contiguous and reuses no prefixes: it
-            # prefills the FULL prompt even when the main model only
-            # ran the suffix
-            wf = self._bucket(len(prompt))
-            dt = np.zeros((1, wf), np.int32)
-            dt[0, :len(prompt)] = prompt
-            db = {"tokens": jnp.asarray(dt),
-                  "lengths": jnp.asarray(np.array([len(prompt)], np.int32))}
-            _, dc = self._draft_prefill(self.draft_params, db)
-            self._draft_cache = self._draft_insert(
-                self._draft_cache, dc, 0, slot, len(prompt))
-        return cache, True
-
-    def _admit_paged_cold(self, cache, slots, last_tok, free):
-        # same take policy as the contiguous _admit: the queue head plus
-        # FIFO-later requests sharing its length bucket — but only other
-        # index misses (a hit admits alone through the suffix path)
-        head = self.queue[0]
-        w = self._bucket(len(head.prompt))
-        limit = min(len(free), self.ecfg.prefill_batch)
-        take = [head]
-        for r in self.queue[1:]:
-            if len(take) >= limit:
-                break
-            if (self._bucket(len(r.prompt)) == w
-                    and not self._mgr.match_tokens(
-                        [int(t) for t in r.prompt])):
-                take.append(r)
-
-        # claim pages first so nothing registers mid-batch: identical
-        # prompts inside one cold batch each prefill privately (the
-        # second one hits the index only on a LATER admission). A
-        # PoolExhausted admit rolls itself back and stops the batch
-        # there — only successfully-placed requests leave the queue,
-        # the rest wait for retirement to free pages.
-        placed = []
-        headroom = self._paged_headroom(slots)
-        for r in take:
-            slot = free[0]
-            prompt = [int(t) for t in r.prompt]
-            # gate on the full worst case (prompt + decode growth), not
-            # just the prompt pages admit() allocates now — earlier
-            # batch members' growth stays owed against the same free
-            # list until they retire
-            need = self._worst_case_pages(r)
-            if need > headroom:
-                break
-            try:
-                self._mgr.admit(slot, prompt)
-            except PoolExhausted:
-                break
-            headroom -= need         # prompt pages taken + growth owed
-            free.pop(0)
-            placed.append((r, slot, prompt))
-        if not placed:
-            return cache, False
-        for r, _, _ in placed:
-            self.queue.remove(r)
-
-        m = len(placed)
-        mp = min(_next_pow2(m), self.ecfg.prefill_batch)
-        toks, lens = self._right_pad([r for r, _, _ in placed], mp, w)
-        b = {"tokens": jnp.asarray(toks), "lengths": jnp.asarray(lens)}
-        logits, pcache = self._prefill_bucket(self.params, b)
-        dcache = None
-        if self._spec_k:
-            _, dcache = self._draft_prefill(self.draft_params, b)
-        self.prefill_calls += 1
-        self.prefill_tokens += sum(len(r.prompt) for r, _, _ in placed)
-        self.energy_tokens += sum(len(r.prompt) for r, _, _ in placed)
-        idx = jnp.asarray([len(r.prompt) - 1 for r, _, _ in placed]
-                          + [0] * (mp - m))
-        first = np.asarray(self._sample(logits[jnp.arange(mp), idx]))
-        now = time.time()
-        for i, (r, slot, prompt) in enumerate(placed):
-            cache = self._insert_paged(
-                cache, pcache["kv"], i, slot,
-                jnp.asarray(self._mgr.tables[slot]), np.int32(0),
-                len(prompt))
-            self._mgr.register(slot, prompt)
-            self._place_admitted(r, slot, int(first[i]), slots, last_tok,
-                                 now)
-            if dcache is not None and slots[slot] is r:
-                self._draft_cache = self._draft_insert(
-                    self._draft_cache, dcache, i, slot, len(prompt))
-        return cache, True
-
-    def _run_continuous(self):
-        n = self.ecfg.max_batch
-        paged = self.ecfg.paged
-        enc_len = self._enc_len if self.cfg.family == "encdec" else 0
-        if paged:
-            # persistent pool: pages indexed in an earlier run() still
-            # hold their prefilled KV, so the cache outlives the run
-            cache = self._kv_cache
-        else:
-            # under a mesh, constrain() shards the slot axis over "data"
-            # eagerly here, so decode-step donation reuses placed buffers
-            with self._ctx():
-                cache = D.cache_init(self.params, self.cfg, n,
-                                     self.ecfg.max_len, dtype=jnp.float32,
-                                     enc_len=enc_len)
-        if self._spec_k:
-            # the draft slot pool is always contiguous (rollback is a
-            # length edit; no prefix reuse) and mirrors the main pool's
-            # slot assignment one-to-one
-            with self._ctx():
-                self._draft_cache = D.cache_init(
-                    self.draft_params, self.ecfg.draft_config, n,
-                    self.ecfg.max_len, dtype=jnp.float32, enc_len=enc_len)
-        slots: List[Optional[Request]] = [None] * n
-        last_tok = np.zeros((n,), np.int32)
-        try:
-            while self.queue or any(s is not None for s in slots):
-                # admission at the horizon boundary. `stalled` breaks
-                # the loop when the paged pool can't hold the queue
-                # head (admit rolled back) — decoding frees pages via
-                # retirement, so we must fall through, NOT spin here.
-                stalled = False
-                while (self.queue and any(s is None for s in slots)
-                       and not stalled):
-                    free = [i for i, s in enumerate(slots) if s is None]
-                    if paged:
-                        cache, progressed = self._admit_paged(
-                            cache, slots, last_tok, free)
-                        stalled = not progressed
-                    else:
-                        cache = self._admit(cache, slots, last_tok, free)
-                if not any(s is not None for s in slots):
-                    if stalled:
-                        # nothing live to retire: the pool can never
-                        # hold the queue head — surface it instead of
-                        # spinning forever
-                        raise PoolExhausted(
-                            f"page pool ({self._mgr.pool.num_blocks} "
-                            f"blocks) cannot hold the queue head's "
-                            f"prompt plus its decode budget with no "
-                            f"live slots left to retire; raise "
-                            f"num_blocks"
-                        )
-                    continue                         # all admits retired at t=1
-                if self._spec_k:
-                    cache = self._spec_round(cache, slots, last_tok, paged)
-                elif self._use_device_loop:
-                    cache = self._horizon_step(cache, slots, last_tok, paged)
-                else:
-                    cache = self._host_step(cache, slots, last_tok, paged)
-        finally:
-            if paged:
-                self._kv_cache = cache               # donated: keep the live
-                # handle so the next run() reuses indexed prefix pages
-
-    def _horizon_step(self, cache, slots: List[Optional[Request]],
-                      last_tok: np.ndarray, paged: bool):
-        """One host round-trip: up to ``decode_horizon`` decode steps on
-        device (``models.decode.decode_multi_step[_paged]``), then drain
-        the returned token buffer, stamp ONE boundary timestamp, and
-        retire finished slots. The loop exits early on device once every
-        live slot is done, so short tails don't burn horizon steps."""
-        n = self.ecfg.max_batch
-        h = self.ecfg.decode_horizon
-        live = np.array([s is not None for s in slots])
-        budget = np.zeros((n,), np.int32)
-        eos = np.full((n,), -1, np.int32)
-        for i, r in enumerate(slots):
-            if r is None:
-                continue
-            budget[i] = r.max_new_tokens - len(r.output)
-            eos[i] = r.eos_id
-        t0 = time.time()
-        if paged:
-            # a CoW valve can only resolve on the host; if one would
-            # trigger past the first position (reachable via fork()
-            # only — full-page publishing keeps shared pages full),
-            # fall back to a single-step round
-            if any(self._mgr.mid_horizon_cow(i, min(h, int(budget[i])))
-                   for i, s in enumerate(slots) if s is not None):
-                h = 1
-
-            # never pre-reserve past the pool: shrink this round's
-            # horizon until the worst-case fresh-page demand fits the
-            # free list (halving keeps the static-horizon compile set
-            # at O(log H) entries under sustained pressure)
-            bs = self.ecfg.block_size
-
-            def _new_pages(hh: int) -> int:
-                need = 0
-                for i, s in enumerate(slots):
-                    if s is None:
-                        continue
-                    end = int(self._mgr.lengths[i]) + min(hh, int(budget[i]))
-                    need += max(0, -(-end // bs)
-                                - len(self._mgr.slot_blocks(i)))
-                return need
-
-            while h > 1 and _new_pages(h) > self._mgr.pool.free_blocks:
-                h //= 2
-            # pre-reserve the whole horizon: grow each live slot's
-            # table min(h, budget) tokens ahead (fresh pages at block
-            # boundaries, eager copy-on-write when shared) so the
-            # device loop never needs the host mid-horizon
-            for i, s in enumerate(slots):
-                if s is None:
-                    continue
-                for _ in range(min(h, int(budget[i]))):
-                    cow = self._mgr.prepare_append(i)
-                    if cow is not None:
-                        cache = self._copy_page(cache, *cow)
-            buf, emitted, done, last, cache, steps = self._decode_multi_paged(
-                self.params, cache, jnp.asarray(self._mgr.tables),
-                jnp.asarray(last_tok), jnp.asarray(live),
-                jnp.asarray(eos), jnp.asarray(budget), h)
-        else:
-            buf, emitted, done, last, cache, steps = self._decode_multi(
-                self.params, cache, jnp.asarray(last_tok),
-                jnp.asarray(live), jnp.asarray(eos), jnp.asarray(budget), h)
-        buf, emitted = np.asarray(buf), np.asarray(emitted)
-        done, last, steps = np.asarray(done), np.asarray(last), int(steps)
-        now = time.time()
-        self.host_syncs += 1
-        self.decode_wall_s += now - t0
-        self.decode_steps += steps
-        # occupancy per DEVICE step: slot i was live at step s of the
-        # horizon iff it emitted more than s tokens
-        for s in range(steps):
-            self.step_occupancy.append(float(np.sum(emitted > s)) / n)
-        for i, r in enumerate(slots):
-            if r is None:
-                continue
-            r.output.extend(int(t) for t in buf[i, :emitted[i]])
-            # energy: only tokens a live slot actually emitted (retired
-            # rows keep stepping under the no-op mask — burned compute on
-            # the TPU, but no modeled crossbar work is attributed)
-            self.energy_tokens += int(emitted[i])
-            last_tok[i] = int(last[i])
-            if done[i]:
-                self._retire(r, now)
-                slots[i] = None              # freed at THIS boundary
-                if paged:
-                    self._mgr.retire(i)
-        return cache
-
-    def _host_step(self, cache, slots: List[Optional[Request]],
-                   last_tok: np.ndarray, paged: bool):
-        """Legacy per-token round-trip (temperature sampling, or
-        ``device_loop=False``): one decode step, host-side sampling,
-        EOS/budget checks and retirement."""
-        n = self.ecfg.max_batch
-        self.step_occupancy.append(sum(s is not None for s in slots) / n)
-        t0 = time.time()
-        if paged:
-            # grow each live slot's table by one token (a fresh
-            # page at block boundaries, copy-on-write if shared)
-            for i, s in enumerate(slots):
-                if s is None:
-                    continue
-                cow = self._mgr.prepare_append(i)
-                if cow is not None:
-                    cache = self._copy_page(cache, *cow)
-            logits, cache = self._decode_paged(
-                self.params, jnp.asarray(last_tok)[:, None], cache,
-                jnp.asarray(self._mgr.tables))
-        else:
-            logits, cache = self._decode(
-                self.params, jnp.asarray(last_tok)[:, None], cache)
-        nxt = np.asarray(self._sample(logits[:, 0]))
-        self.decode_steps += 1
-        self.host_syncs += 1
-        now = time.time()
-        self.decode_wall_s += now - t0
-        for i, r in enumerate(slots):
-            if r is None:
-                continue
-            t = int(nxt[i])
-            r.output.append(t)
-            self.energy_tokens += 1
-            last_tok[i] = t
-            if t == r.eos_id or len(r.output) >= r.max_new_tokens:
-                self._retire(r, now)
-                slots[i] = None              # freed THIS step
-                if paged:
-                    self._mgr.retire(i)
-        return cache
-
-    # -- speculative decoding -------------------------------------------------
-    def _spec_round(self, cache, slots: List[Optional[Request]],
-                    last_tok: np.ndarray, paged: bool):
-        """One speculative round: draft proposes, the main model
-        verifies, the longest argmax-matching proposal prefix plus one
-        bonus token is emitted, and both caches roll back to the
-        accepted length.
-
-        The draft runs k+1 masked steps so its cache holds every
-        position a full acceptance needs (``decode_propose``); the
-        verify commits k+1 K/V positions but leaves lengths untouched,
-        so the rollback is the single ``_set_len`` edit at the end
-        (paged: plus ``PagedKVManager.truncate`` page releases). Paged
-        rounds pre-reserve all k+1 positions per live slot BEFORE the
-        verify; if the fresh-page demand exceeds the free list the
-        round runs at width 1 — exactly a vanilla decode step (the
-        admission headroom invariant guarantees one position always
-        fits) — which keeps the draft cache in lockstep under pool
-        pressure. Every emitted token is a main-model argmax at the
-        same cache state vanilla decode would have, so outputs are
-        token-identical to vanilla greedy serving.
-        """
-        n = self.ecfg.max_batch
-        k = self._spec_k
-        live = np.array([s is not None for s in slots])
-        n_live = int(live.sum())
-        t0 = time.time()
-        k_round = k
-        base_len = None
-        if paged:
-            bs = self.ecfg.block_size
-            base_len = [int(self._mgr.lengths[i]) for i in range(n)]
-            need = 0
-            for i, s in enumerate(slots):
-                if s is None:
-                    continue
-                end = base_len[i] + k + 1
-                need += max(0, -(-end // bs)
-                            - len(self._mgr.slot_blocks(i)))
-            if need > self._mgr.pool.free_blocks:
-                k_round = 0
-            for i, s in enumerate(slots):
-                if s is None:
-                    continue
-                for _ in range(k_round + 1):
-                    cow = self._mgr.prepare_append(i)
-                    if cow is not None:
-                        cache = self._copy_page(cache, *cow)
-        live_dev = jnp.asarray(live)
-        last_dev = jnp.asarray(last_tok)
-        props, self._draft_cache = self._draft_propose(
-            self.draft_params, self._draft_cache, last_dev, live_dev,
-            k_round + 1)
-        if paged:
-            logits, cache = self._verify_paged(
-                self.params, cache, jnp.asarray(self._mgr.tables),
-                live_dev, last_dev, props)
-        else:
-            logits, cache = self._verify(self.params, cache, last_dev,
-                                         props)
-        # one host sync per round: the proposals and the verify argmaxes
-        # land together (async dispatch keeps the draft/verify pipelined)
-        m = np.asarray(jnp.argmax(logits, axis=-1))     # (n, k_round+1)
-        props = np.asarray(props)
-        now = time.time()
-        self.host_syncs += 1
-        self.decode_wall_s += now - t0
-        self.decode_steps += 1
-        self.spec_rounds += 1
-        self.step_occupancy.append(n_live / n)
-        for i in range(n):
-            r = slots[i]
-            if r is None:
-                continue
-            a = 0
-            while a < k_round and props[i, a] == m[i, a]:
-                a += 1
-            self.spec_proposed += k_round
-            self.spec_accepted += a
-            for t in m[i, :a + 1]:
-                t = int(t)
-                r.output.append(t)
-                self.energy_tokens += 1
-                last_tok[i] = t
-                if t == r.eos_id or len(r.output) >= r.max_new_tokens:
-                    self._retire(r, now)
-                    slots[i] = None
-                    if paged:
-                        self._mgr.retire(i)
-                    break
-            if paged and slots[i] is not None:
-                self._mgr.truncate(i, base_len[i] + a + 1)
-        # the rollback: both caches' lengths snap to the accepted
-        # position (free slots to 0); junk K/V above the watermark is
-        # never attended and the next round overwrites it in place
-        lens = np.zeros((n,), np.int32)
-        for i, r in enumerate(slots):
-            if r is not None:
-                lens[i] = (self._patch_len + len(r.prompt)
-                           + len(r.output) - 1)
-        lens_dev = jnp.asarray(lens)
-        cache = self._set_len(cache, lens_dev)
-        self._draft_cache = self._set_len(self._draft_cache, lens_dev)
-        return cache
-
-    # -- static batching ------------------------------------------------------
-
     def _extra_rows(self, key: str, reqs: List[Request], bp: int,
                     default_shape) -> np.ndarray:
-        """Per-request side-input rows for a static batch.
-
-        Rows come from ``Request.extra_idx`` when submit() set one, and
-        are positional by submission order otherwise (request uid 1 is
-        row 0, ...). Slicing the head of the array — the old behavior —
-        handed EVERY batch the first batch's rows; gathering per request
-        keeps later batches on their own inputs. Batch-bucket padding
-        rows are zeros (their outputs are ignored).
-        """
+        """Per-request side-input rows for a prefill batch: gathered by
+        ``Request.extra_idx`` (positional by submission order when
+        unset) so every batch gets its OWN rows; padding rows are
+        zeros (their outputs are ignored)."""
         arr = self.extra.get(key)
         if arr is None:
             arr = np.zeros((0,) + tuple(default_shape), np.float32)
@@ -1427,91 +461,20 @@ class ServeEngine:
             out[i] = arr[idx]
         return out
 
-    def _run_batch(self, reqs: List[Request]):
-        nreq = len(reqs)
-        # pow2-bucket the batch dim: _prefill_full compiles once per
-        # (batch bucket, padded length) pair instead of once per exact
-        # admitted batch size (batch rows are independent everywhere in
-        # the model, so padding rows are inert)
-        bp = min(_next_pow2(nreq), self.ecfg.max_batch)
-        # RIGHT-pad every family to a pow2 length bucket + per-row true
-        # lengths: the causal mask keeps pad columns out of attention,
-        # the lengths make recurrent prefill exact, and decode advances
-        # each row at its own position (vector cache lengths) — so
-        # mixed-length static batches decode bit-exactly with the
-        # sequential and continuous paths. (The historical left-pad
-        # variant was NOT exact for mixed lengths: pad positions sat
-        # inside the causal window and leaked into attention.)
-        w = self._bucket(max(len(r.prompt) for r in reqs))
-        toks, lens = self._right_pad(reqs, bp, w)
-        b = self._prefill_batch(reqs, bp, toks, lens)
-        logits, cache = self._prefill_full(self.params, b)
-        self.prefill_calls += 1
-        self.prefill_tokens += sum(len(r.prompt) for r in reqs)
-        self.energy_tokens += sum(len(r.prompt) for r in reqs)
-        # each row's first token comes from its true last prompt position
-        nxt = self._sample(
-            logits[jnp.arange(bp), jnp.maximum(b["lengths"] - 1, 0)])
-        first = np.asarray(nxt)
-        t_first = time.time()
-        for i, r in enumerate(reqs):
-            t = int(first[i])
-            r.output.append(t)
-            r.t_first_token = t_first
-            if t == r.eos_id or len(r.output) >= r.max_new_tokens:
-                r.done, r.t_done = True, t_first
-        # submit() bounds every request's own writes (side/spec overhead
-        # included), so live rows never clamp; a finished row that keeps
-        # stepping only touches its own junk tail — batch rows are
-        # independent and the cache dies with the batch
-        max_new = max(r.max_new_tokens for r in reqs)
-        for _ in range(max_new - 1):
-            # occupancy relative to the slot pool a continuous scheduler
-            # would have: retired-but-held and unfilled slots count as idle
-            n_alive = sum(
-                not r.done and len(r.output) < r.max_new_tokens for r in reqs
-            )
-            if n_alive == 0:
-                break
-            self.step_occupancy.append(n_alive / self.ecfg.max_batch)
-            logits, cache = self._decode(
-                self.params, jnp.asarray(nxt)[:, None], cache
-            )
-            self.decode_steps += 1
-            nxt = self._sample(logits[:, 0])
-            arr = np.asarray(nxt)
-            now = time.time()
-            for i, r in enumerate(reqs):
-                if r.done or len(r.output) >= r.max_new_tokens:
-                    continue
-                t = int(arr[i])
-                r.output.append(t)
-                self.energy_tokens += 1
-                if t == r.eos_id or len(r.output) >= r.max_new_tokens:
-                    r.done, r.t_done = True, now
-        now = time.time()
-        for r in reqs:
-            r.done = True
-            r.t_done = r.t_done or now
-            self.finished.append(r)
+    @staticmethod
+    def _right_pad(reqs: List[Request], rows: int, width: int):
+        return right_pad(reqs, rows, width)
 
 
 def throughput_stats(reqs: List[Request]) -> Dict[str, float]:
     """Aggregate request metrics; robust to empty/never-started requests.
 
-    Requests that never produced a token contribute to ``requests`` but
-    not to TTFT (no first token to time); a request list with no finish
-    timestamps falls back to enqueue time so ``tokens_per_s`` is 0 rather
-    than garbage.
-
-    Per-token latency (``mean_tpot_s``) is derived from the two REAL
-    timestamps each request has — first token at admission, completion
-    at its retirement boundary — divided by its decode-token count.
-    Under the device horizon loop the engine only touches the host at
-    horizon boundaries, so there are no per-token wall times to average
-    (and none are fabricated): the boundary-to-boundary quotient is the
-    honest figure at every ``decode_horizon``, and degrades gracefully
-    to true per-token latency at horizon 1.
+    Never-started requests count toward ``requests`` but not TTFT.
+    ``mean_tpot_s`` divides the two REAL timestamps each request has
+    (first token at admission, completion at retirement) by its decode
+    count — honest at every ``decode_horizon`` (no per-token wall times
+    are fabricated inside a device horizon), and equal to true
+    per-token latency at horizon 1.
     """
     if not reqs:
         return {}

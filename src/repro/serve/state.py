@@ -1,0 +1,163 @@
+"""Slot-state layer: one insert/select/retire/set-length interface over
+every decode-cache layout.
+
+The serve engine carries three physically different per-slot pools —
+the contiguous stacked-KV stripe (attention families), the paged block
+pool reached through per-slot block tables, and recurrent state leaves
+(SSM/xLSTM/hybrid, no sequence axis at all). Historically each layout
+was an ``if paged:`` / per-family branch inside the engine loop; this
+module collapses them behind :class:`SlotState`:
+
+``init_pool()``
+    allocate the device pool (eager, under the engine's sharding rules
+    so slot leaves place over the ``data`` mesh axis before the first
+    donated jit call).
+
+``insert(src, row, slot, length)``
+    scatter row ``row`` of a prefill result into slot ``slot`` at the
+    given true length. The contiguous path covers KV stripes, recurrent
+    leaves and side-input pools in one generic leaf walk
+    (``models.decode.cache_insert``); the paged path scatters through
+    the slot's block table (``paged_cache_insert``).
+
+``retire(slot)``
+    free the slot. Contiguous/recurrent slots are simply unbound (the
+    next insert overwrites every leaf); paged slots additionally
+    release their page refcounts (indexed prefixes outlive requests).
+
+``set_lengths(lens)``
+    stamp the per-slot length vector — the speculative-decoding
+    rollback primitive (paged engines pair it with
+    ``PagedKVManager.truncate`` page releases).
+
+Slot *bookkeeping* (which request occupies which slot, last sampled
+token per slot) is shared by both layouts and lives on the base class,
+so the scheduler and executors never touch layout-specific state.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax.numpy as jnp
+
+import numpy as np
+
+from repro.models import decode as D
+from repro.serve.paged_kv import PagedKVManager
+
+PyTree = Any
+
+
+class SlotState:
+    """Slot bookkeeping + the layout-agnostic pool interface.
+
+    Holds the request-per-slot binding and last-token vector; concrete
+    layouts implement ``init_pool`` / ``insert`` / ``retire`` /
+    ``set_lengths`` against the engine's compiled functions. The device
+    cache itself lives on the engine (``eng._cache``) because jit
+    donation rebinds the handle on every call.
+    """
+
+    def __init__(self, eng):
+        self.eng = eng
+        n = eng.ecfg.max_batch
+        self.slots: List[Optional[Any]] = [None] * n
+        self.last_tok = np.zeros((n,), np.int32)
+
+    # -- bookkeeping (layout-independent) -------------------------------
+    @property
+    def any_live(self) -> bool:
+        return any(s is not None for s in self.slots)
+
+    def free(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def live_flags(self) -> np.ndarray:
+        return np.array([s is not None for s in self.slots])
+
+    def bind(self, request, slot: int, token: int) -> None:
+        self.slots[slot] = request
+        request.slot = slot
+        self.last_tok[slot] = token
+
+    # -- pool interface -------------------------------------------------
+    def init_pool(self) -> PyTree:
+        raise NotImplementedError
+
+    def insert(self, src: PyTree, row: int, slot: int,
+               length: int) -> None:
+        raise NotImplementedError
+
+    def retire(self, slot: int) -> None:
+        """Unbind the slot; layout subclasses release physical storage."""
+        self.slots[slot] = None
+
+    def set_lengths(self, lens: np.ndarray) -> None:
+        raise NotImplementedError
+
+
+class ContiguousSlotState(SlotState):
+    """Contiguous per-slot stripes: stacked KV, recurrent leaves and
+    side-input pools, all scattered by one generic leaf walk."""
+
+    def init_pool(self) -> PyTree:
+        eng = self.eng
+        enc_len = eng._enc_len if eng.cfg.family == "encdec" else 0
+        with eng._ctx():
+            return D.cache_init(eng.params, eng.cfg, eng.ecfg.max_batch,
+                                eng.ecfg.max_len, dtype=jnp.float32,
+                                enc_len=enc_len)
+
+    def insert(self, src, row, slot, length):
+        eng = self.eng
+        eng._cache = eng._insert(eng._cache, src, row, slot, length)
+
+    def set_lengths(self, lens):
+        eng = self.eng
+        eng._cache = eng._set_len(eng._cache, jnp.asarray(lens))
+
+
+class PagedSlotState(SlotState):
+    """Paged block pool: per-slot block tables over fixed-size KV pages
+    with radix shared-prefix reuse (``serve/paged_kv.py``)."""
+
+    def __init__(self, eng, mgr: PagedKVManager):
+        super().__init__(eng)
+        self.mgr = mgr
+
+    def init_pool(self) -> PyTree:
+        eng = self.eng
+        with eng._ctx():
+            return D.paged_cache_init(
+                eng.params, eng.cfg, eng.ecfg.max_batch, eng.ecfg.max_len,
+                eng.ecfg.block_size, self.mgr.pool.num_blocks,
+                dtype=jnp.float32,
+            )
+
+    def insert(self, src, row, slot, length):
+        # paged admission scatters with an explicit start offset (prefix
+        # reuse); the no-offset form used by the layout-agnostic callers
+        # writes the whole prompt
+        eng = self.eng
+        eng._cache = eng._insert_paged(
+            eng._cache, src, row, slot,
+            jnp.asarray(self.mgr.tables[slot]), np.int32(0), length)
+
+    def retire(self, slot):
+        super().retire(slot)
+        self.mgr.retire(slot)
+
+    def set_lengths(self, lens):
+        eng = self.eng
+        eng._cache = eng._set_len(eng._cache, jnp.asarray(lens))
+
+    def prepare_append(self, slot: int) -> None:
+        """Grow one slot's table by one token: a fresh page at block
+        boundaries, an eager copy-on-write duplication when shared."""
+        cow = self.mgr.prepare_append(slot)
+        if cow is not None:
+            eng = self.eng
+            eng._cache = eng._copy_page(eng._cache, *cow)
+
+    def truncate(self, slot: int, length: int) -> None:
+        self.mgr.truncate(slot, length)

@@ -1,0 +1,405 @@
+"""Scheduler layer: EngineConfig.validate messages, admission policies,
+cost-aware serving, streaming step() deltas, energy-accounting hooks.
+
+The validation tests pin the EXACT error text for every invalid knob
+combination — ``EngineConfig.validate`` is the single home of engine
+validation, and these messages are API (callers match on them)."""
+import dataclasses
+import re
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.config import PSQ_TERNARY
+from repro.models import init_model
+from repro.serve import (
+    CostAwareEnergyBudget,
+    EngineConfig,
+    PackedModelCache,
+    Pow2BucketFCFS,
+    Request,
+    ServeEngine,
+    pack_tree_psq,
+    resolve_admission_policy,
+)
+from repro.serve.scheduler import next_pow2
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _cfg(arch="tinyllama-1.1b"):
+    return get_config(arch).reduced()
+
+
+def _raises(ecfg, cfg, msg, **kw):
+    with pytest.raises(ValueError, match=re.escape(msg)):
+        ecfg.validate(cfg, **kw)
+
+
+class TestEngineConfigValidate:
+    """Every invalid combination raises from validate(), same text."""
+
+    def test_unknown_mode(self):
+        _raises(EngineConfig(mode="bogus"), _cfg(),
+                "unknown engine mode 'bogus'")
+
+    def test_horizon_below_one(self):
+        _raises(EngineConfig(decode_horizon=0), _cfg(),
+                "decode_horizon must be >= 1, got 0")
+
+    def test_horizon_with_sampling(self):
+        _raises(EngineConfig(decode_horizon=4, temperature=0.7), _cfg(),
+                "decode_horizon > 1 runs the on-device greedy loop; "
+                "temperature sampling needs the per-token host path "
+                "(set decode_horizon=1)")
+
+    def test_horizon_without_device_loop(self):
+        _raises(EngineConfig(decode_horizon=4, device_loop=False), _cfg(),
+                "decode_horizon > 1 requires device_loop=True")
+
+    def test_spec_k_negative(self):
+        _raises(EngineConfig(spec_k=-1), _cfg(),
+                "spec_k must be >= 0, got -1")
+
+    def test_spec_needs_draft(self):
+        _raises(EngineConfig(spec_k=2), _cfg(),
+                "speculative decoding (spec_k > 0) needs both "
+                "EngineConfig.draft_config and a draft_params tree")
+
+    def test_spec_needs_continuous(self):
+        cfg = _cfg()
+        dcfg = dataclasses.replace(cfg, n_layers=1)
+        _raises(EngineConfig(spec_k=2, draft_config=dcfg, mode="static"),
+                cfg, "speculative decoding requires the continuous "
+                "scheduler; resolved mode is 'static'",
+                has_draft_params=True)
+
+    def test_spec_rejects_recurrent_family(self):
+        cfg = _cfg("zamba2-7b")
+        dcfg = dataclasses.replace(cfg, n_layers=1)
+        _raises(EngineConfig(spec_k=2, draft_config=dcfg), cfg,
+                "recurrent state folds every token and cannot roll "
+                "back by a length edit", has_draft_params=True)
+
+    def test_spec_greedy_only(self):
+        cfg = _cfg()
+        dcfg = dataclasses.replace(cfg, n_layers=1)
+        _raises(EngineConfig(spec_k=2, draft_config=dcfg,
+                             temperature=0.5), cfg,
+                "speculative decoding is greedy-only (acceptance "
+                "compares draft proposals with main-model argmaxes); "
+                "set temperature=0", has_draft_params=True)
+
+    def test_spec_replaces_horizon(self):
+        cfg = _cfg()
+        dcfg = dataclasses.replace(cfg, n_layers=1)
+        _raises(EngineConfig(spec_k=2, draft_config=dcfg,
+                             decode_horizon=4), cfg,
+                "speculative decoding replaces the device horizon "
+                "loop; set decode_horizon=1", has_draft_params=True)
+
+    def test_spec_draft_family_mismatch(self):
+        cfg = _cfg()
+        dcfg = dataclasses.replace(_cfg("zamba2-7b"),
+                                   vocab_size=cfg.vocab_size)
+        _raises(EngineConfig(spec_k=2, draft_config=dcfg), cfg,
+                f"draft family {dcfg.family!r} must match the target "
+                f"family {cfg.family!r}", has_draft_params=True)
+
+    def test_spec_vocab_mismatch(self):
+        cfg = _cfg()
+        dcfg = dataclasses.replace(cfg, vocab_size=cfg.vocab_size // 2)
+        _raises(EngineConfig(spec_k=2, draft_config=dcfg), cfg,
+                "draft and target models must share a vocabulary "
+                f"({dcfg.vocab_size} != {cfg.vocab_size})",
+                has_draft_params=True)
+
+    def test_spec_side_input_d_model_mismatch(self):
+        cfg = _cfg("whisper-large-v3")
+        dcfg = dataclasses.replace(cfg, n_layers=1,
+                                   d_model=cfg.d_model * 2)
+        _raises(EngineConfig(spec_k=2, draft_config=dcfg), cfg,
+                "side-input families need draft d_model == target "
+                "d_model: enc_embeds/patch_embeds rows feed both "
+                f"models ({dcfg.d_model} != {cfg.d_model})",
+                has_draft_params=True)
+
+    def test_unknown_energy_style(self):
+        _raises(EngineConfig(energy_style="bogus"), _cfg(),
+                "unknown energy_style 'bogus'")
+
+    def test_paged_rejects_recurrent(self):
+        _raises(EngineConfig(paged=True), _cfg("zamba2-7b"),
+                "recurrent state has no sequence axis to page")
+
+    def test_paged_rejects_cross_attention(self):
+        _raises(EngineConfig(paged=True), _cfg("whisper-large-v3"),
+                "cross-attention KV has no pages")
+
+    def test_paged_rejects_patch_embeds(self):
+        cfg = _cfg("llava-next-mistral-7b")
+        _raises(EngineConfig(paged=True), cfg,
+                "paged KV cache does not take per-request patch_embeds",
+                extra={"patch_embeds": np.zeros((1, 4, cfg.d_model))})
+
+    def test_paged_needs_continuous(self):
+        _raises(EngineConfig(paged=True, mode="static"), _cfg(),
+                "paged KV cache requires the continuous scheduler; "
+                "resolved mode is 'static'")
+
+    def test_paged_block_size_divisibility(self):
+        _raises(EngineConfig(paged=True, max_len=100, block_size=16),
+                _cfg(),
+                "max_len (100) must be a multiple of block_size (16)")
+
+    def test_unknown_admission_policy(self):
+        _raises(EngineConfig(admission_policy="bogus"), _cfg(),
+                "unknown admission_policy 'bogus'")
+
+    def test_negative_energy_budget(self):
+        _raises(EngineConfig(energy_budget_pj=-1.0), _cfg(),
+                "energy_budget_pj must be >= 0, got -1.0")
+
+    def test_cost_aware_needs_budget(self):
+        _raises(EngineConfig(admission_policy="cost-aware"), _cfg(),
+                "cost-aware admission needs a positive "
+                "EngineConfig.energy_budget_pj cap")
+
+    def test_check_order_is_fixed(self):
+        """With several knobs invalid at once, the FIRST check in the
+        documented order (mode, horizon, spec, ...) raises."""
+        _raises(EngineConfig(decode_horizon=0, spec_k=-1,
+                             energy_style="bogus",
+                             admission_policy="bogus"), _cfg(),
+                "decode_horizon must be >= 1, got 0")
+
+    def test_valid_configs_resolve(self):
+        assert EngineConfig().validate(_cfg()) == "continuous"
+        assert EngineConfig(mode="static").validate(_cfg()) == "static"
+        assert EngineConfig(admission_policy="cost-aware",
+                            energy_budget_pj=1e6
+                            ).validate(_cfg()) == "continuous"
+
+
+def _req(uid, plen, mnew=8):
+    return Request(uid, np.arange(plen, dtype=np.int32), mnew, None,
+                   t_enqueue=0.0)
+
+
+def _bucket(r):
+    return max(8, next_pow2(len(r.prompt)))
+
+
+class TestAdmissionPolicies:
+    def test_fcfs_takes_head_bucket_in_fifo_order(self):
+        q = [_req(1, 5), _req(2, 6), _req(3, 20), _req(4, 7)]
+        take = Pow2BucketFCFS().take(q, 3, _bucket)
+        assert [r.uid for r in take] == [1, 2, 4]   # 20 > bucket 8
+
+    def test_fcfs_respects_limit_and_eligible(self):
+        q = [_req(1, 5), _req(2, 6), _req(3, 7), _req(4, 5)]
+        p = Pow2BucketFCFS()
+        assert [r.uid for r in p.take(q, 2, _bucket)] == [1, 2]
+        take = p.take(q, 4, _bucket, eligible=lambda r: r.uid != 2)
+        assert [r.uid for r in take] == [1, 3, 4]
+        assert p.admits_head(q[0], live=[_req(9, 5)])
+
+    def test_cost_aware_rejects_nonpositive_budget(self):
+        with pytest.raises(ValueError, match="positive budget_pj"):
+            CostAwareEnergyBudget(0.0, lambda r: 1.0)
+
+    def test_cost_aware_defers_over_budget(self):
+        cost = lambda r: float(len(r.prompt))                 # noqa: E731
+        p = CostAwareEnergyBudget(10.0, cost)
+        q = [_req(1, 4), _req(2, 4), _req(3, 4)]
+        take = p.take(q, 3, _bucket)
+        assert [r.uid for r in take] == [1, 2]    # 4 + 4 <= 10 < 12
+        assert p.deferrals == 1
+
+    def test_cost_aware_forced_head_prevents_deadlock(self):
+        """An over-budget head admits alone when nothing is live —
+        deferring it forever would deadlock the engine."""
+        p = CostAwareEnergyBudget(1.0, lambda r: 100.0)
+        take = p.take([_req(1, 4)], 4, _bucket, live=())
+        assert [r.uid for r in take] == [1]
+        assert p.admits_head(_req(2, 4), live=())
+
+    def test_cost_aware_head_waits_for_live_budget(self):
+        cost = lambda r: float(len(r.prompt))                 # noqa: E731
+        p = CostAwareEnergyBudget(10.0, cost)
+        assert not p.admits_head(_req(2, 4), live=[_req(1, 9)])
+        assert p.deferrals == 1
+        assert p.admits_head(_req(2, 4), live=[_req(1, 5)])
+
+    def test_resolver_maps_config_to_policy(self, tiny):
+        cfg, params = tiny
+        eng = ServeEngine(params, cfg,
+                          EngineConfig(max_batch=2, max_len=64))
+        assert isinstance(
+            resolve_admission_policy(EngineConfig(), eng.energy),
+            Pow2BucketFCFS)
+        p = resolve_admission_policy(
+            EngineConfig(admission_policy="cost-aware",
+                         energy_budget_pj=5.0), eng.energy)
+        assert isinstance(p, CostAwareEnergyBudget)
+        assert p.budget_pj == 5.0
+
+
+class TestCostAwareServing:
+    def test_budgeted_engine_defers_but_matches_fcfs(self, tiny):
+        """Under a cap of ~2 worst-case requests the engine defers
+        admissions while slots are free, and still produces the exact
+        greedy outputs of the unbudgeted run — admission order changes
+        WHEN a request decodes, never WHAT."""
+        cfg, params = tiny
+        rng = np.random.RandomState(0)
+        trace = [(rng.randint(0, cfg.vocab_size, size=6), 4)
+                 for _ in range(5)]
+
+        def serve(**kw):
+            eng = ServeEngine(params, cfg,
+                              EngineConfig(max_batch=4, max_len=64, **kw))
+            for prompt, mnew in trace:
+                eng.submit(prompt, max_new_tokens=mnew)
+            done = eng.run()
+            return eng, {r.uid: list(r.output) for r in done}
+
+        eng_f, toks_f = serve()
+        cost = max(eng_f.energy.request_cost_pj(r)
+                   for r in eng_f.finished)
+        assert cost > 0
+        eng_c, toks_c = serve(admission_policy="cost-aware",
+                              energy_budget_pj=2.0 * cost)
+        assert toks_c == toks_f
+        sched = eng_c.stats()
+        assert sched["admission_policy"] == "cost-aware"
+        assert sched["admission_deferrals"] > 0
+        assert eng_f.stats()["admission_deferrals"] == 0
+
+    def test_reset_stats_clears_deferrals(self, tiny):
+        cfg, params = tiny
+        eng = ServeEngine(params, cfg,
+                          EngineConfig(max_batch=2, max_len=64,
+                                       admission_policy="cost-aware",
+                                       energy_budget_pj=1e-3))
+        rng = np.random.RandomState(0)
+        for _ in range(3):
+            eng.submit(rng.randint(0, cfg.vocab_size, size=6),
+                       max_new_tokens=2)
+        eng.run()
+        assert eng.policy.deferrals > 0
+        eng.reset_stats()
+        assert eng.policy.deferrals == 0
+        assert eng.stats()["admission_deferrals"] == 0
+
+
+class TestStreamingStep:
+    def test_step_deltas_concatenate_to_run_outputs(self, tiny):
+        cfg, params = tiny
+        rng = np.random.RandomState(1)
+        trace = [(rng.randint(0, cfg.vocab_size, size=n), m)
+                 for n, m in ((5, 4), (6, 6), (9, 3))]
+
+        ref = ServeEngine(params, cfg, EngineConfig(max_batch=2,
+                                                    max_len=64))
+        for prompt, mnew in trace:
+            ref.submit(prompt, max_new_tokens=mnew)
+        want = {r.uid: list(r.output) for r in ref.run()}
+
+        eng = ServeEngine(params, cfg, EngineConfig(max_batch=2,
+                                                    max_len=64))
+        got = {}
+        # submit mid-flight: two up front, the third after a round
+        uids = [eng.submit(*trace[0]), eng.submit(*trace[1])]
+        steps = 0
+        while not eng.drained:
+            if steps == 1:
+                uids.append(eng.submit(*trace[2]))
+            for uid, toks in eng.step().items():
+                got.setdefault(uid, []).extend(toks)
+            steps += 1
+        # per-request outputs are independent of arrival time (greedy)
+        assert {u: got[u] for u in uids} == want
+        assert steps > 1
+        assert eng.step() == {}          # drained: no-op
+
+    def test_step_requires_continuous_mode(self, tiny):
+        cfg, params = tiny
+        eng = ServeEngine(params, cfg,
+                          EngineConfig(max_batch=2, max_len=64,
+                                       mode="static"))
+        eng.submit(np.arange(4), max_new_tokens=2)
+        with pytest.raises(ValueError, match="continuous scheduler"):
+            eng.step()
+
+
+class TestEnergyAccountingHooks:
+    """The single account_prefill/account_decode boundary attributes
+    exactly one energy token per true token, identically across every
+    executor — the regression pin for the call-site dedupe."""
+
+    @pytest.fixture(scope="class")
+    def packed(self):
+        cfg = get_config("tinyllama-1.1b").reduced()
+        qcfg = dataclasses.replace(PSQ_TERNARY,
+                                   kernel_backend="reference",
+                                   xbar_rows=64)
+        cfg = cfg.with_quant(qcfg)
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        params = pack_tree_psq(params, qcfg, PackedModelCache())
+        return cfg, params
+
+    # the PR 7 energy-bench trace shape (serve_bench --smoke --energy)
+    def _trace(self, cfg):
+        rng = np.random.RandomState(0)
+        return [(rng.randint(0, cfg.vocab_size,
+                             size=int(rng.randint(4, 13))),
+                 int(rng.randint(2, 5))) for _ in range(6)]
+
+    def _serve(self, cfg, params, **kw):
+        eng = ServeEngine(params, cfg,
+                          EngineConfig(max_batch=3, max_len=32, **kw))
+        for prompt, mnew in self._trace(cfg):
+            eng.submit(prompt, max_new_tokens=mnew)
+        eng.run()
+        return eng
+
+    def test_energy_tokens_equal_true_forward_tokens(self, packed):
+        cfg, params = packed
+        eng = self._serve(cfg, params)
+        s = eng.stats()
+        prompts = sum(len(p) for p, _ in self._trace(cfg))
+        outputs = sum(len(r.output) for r in eng.finished)
+        # each request's first token comes out of its prefill forward;
+        # every later token is one decode forward
+        assert s["prefill_tokens"] == prompts
+        assert s["energy_tokens"] == prompts + outputs - len(eng.finished)
+        assert s["energy_pj_total"] == pytest.approx(
+            s["energy_pj_per_token"] * s["energy_tokens"])
+        assert s["energy_pj_total"] > 0
+
+    def test_counters_identical_across_executors(self, packed):
+        """Host-loop, device-horizon and static executors attribute the
+        same energy for the same trace (stats() unchanged by the
+        accounting-hook dedupe)."""
+        cfg, params = packed
+        base = self._serve(cfg, params).stats()
+        # prefill_calls is scheduling (horizon boundaries batch freed
+        # slots into fewer admission waves); the attribution invariant
+        # is the TOKEN counters every call site must agree on
+        keys = ("prefill_tokens", "energy_tokens",
+                "energy_pj_total", "edap_total")
+        horizon = self._serve(cfg, params, decode_horizon=4).stats()
+        static = self._serve(cfg, params, mode="static").stats()
+        for k in keys:
+            assert horizon[k] == base[k], k
+            assert static[k] == base[k], k

@@ -27,7 +27,7 @@ from repro.core.psq_linear import init_linear
 from repro.kernels import registry
 from repro.kernels.occupancy import (
     META_BLOCK, ColumnOccupancy, column_occupancy, kernel_block_flags,
-    occupancy_for_kernel,
+    occupancy_for_kernel, shard_occupancy,
 )
 from repro.kernels.ref import psq_matmul_ref
 from repro.serve.cache import PackedLayer, PackedModelCache, pack_tree_psq
@@ -350,6 +350,135 @@ class TestEngineSkipParity:
                 assert any(o > 0 for o in occs)
             eng = ServeEngine(params=packed, cfg=cfg,
                               ecfg=EngineConfig(max_batch=2, max_len=48))
+            rng = np.random.RandomState(5)
+            for _ in range(3):
+                eng.submit(rng.randint(0, cfg.vocab_size, size=6),
+                           max_new_tokens=5)
+            outs[skip] = [r.output for r in eng.run()]
+        assert outs[True] == outs[False]
+
+
+class TestShardOccupancy:
+    """Per-shard metadata re-slicing for tensor parallelism
+    (:func:`repro.kernels.occupancy.shard_occupancy`)."""
+
+    def test_reslice_and_conservative_merge(self):
+        # O=4 blocks of 32; blocks 0 and 2 zero -> each 2-way shard
+        # half has its FIRST local block zero -> merged local block 0
+        # is skippable, local block 1 is not
+        w = _sparse_weight(64, 128, 0.0, block=32)
+        w[:, 0:32] = 0.0
+        w[:, 64:96] = 0.0
+        occ = column_occupancy(w, xbar_rows=64, n_w=4, block=32)
+        s = shard_occupancy(occ, 2)
+        assert s is not None and s.n_cols == 64 and s.n_blocks == 2
+        assert s.zero_blocks_np().tolist() == [[True, False]]
+        # the re-sliced metadata passes the kernel guard the global
+        # metadata fails on a shard's local problem
+        assert occupancy_for_kernel(occ, 64, 64, 64) is None
+        assert occupancy_for_kernel(s, 64, 64, 64) is s
+
+    def test_merge_drops_shard_disagreement(self):
+        # only shard 0's half is zero -> AND across shards leaves
+        # nothing skippable
+        w = _sparse_weight(64, 128, 0.0, block=32)
+        w[:, 0:64] = 0.0
+        occ = column_occupancy(w, xbar_rows=64, n_w=4, block=32)
+        s = shard_occupancy(occ, 2)
+        assert s is not None
+        assert not any(any(row) for row in s.zero_blocks)
+        # fractions are the per-shard minimum, never an average
+        assert s.zero_col_frac == ((0.0, 0.0),)
+
+    def test_unrepresentable_splits_return_none(self):
+        w = _sparse_weight(64, 96, 1.0, block=32)
+        occ = column_occupancy(w, xbar_rows=64, n_w=4, block=32)
+        assert shard_occupancy(occ, 5) is None      # 96 % 5 != 0
+        # 96/2 = 48 puts a shard boundary inside a 32-wide block
+        assert shard_occupancy(occ, 2) is None
+        assert shard_occupancy(occ, 1) is occ
+        assert shard_occupancy(None, 2) is None
+
+    @needs_devices(2)
+    def test_tp_skip_vs_dense_bit_exact(self):
+        """2-way model mesh: shards must sparsity-skip (not fall back
+        dense) and still match the dense single-device forward bit for
+        bit."""
+        from repro.core.psq_linear import apply_linear
+        from repro.kernels.occupancy import shard_occupancy as shard_occ
+        from repro.parallel.sharding import RULES_2D, axis_rules
+
+        # zero the first block of EACH shard half so the conservative
+        # cross-shard merge keeps a skippable block
+        layer, qcfg = _sparse_packed_layer(0.0, n_out=4 * META_BLOCK)
+        w = np.asarray(layer.w_codes).copy()
+        w[:, :META_BLOCK] = 0
+        w[:, 2 * META_BLOCK:3 * META_BLOCK] = 0
+        layer = dataclasses.replace(
+            layer, w_codes=jnp.asarray(w),
+            occupancy=column_occupancy(w, xbar_rows=qcfg.xbar_rows,
+                                       n_w=qcfg.spec.n_bits_w))
+        s = shard_occ(layer.occupancy, 2)
+        assert s is not None and s.skippable_block_fraction > 0
+
+        dense_layer = dataclasses.replace(
+            layer, cfg=dataclasses.replace(qcfg, sparsity_skip=False))
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 96))
+        y_ref, _ = dense_layer.apply_serving(x)     # single-device dense
+        mesh = jax.make_mesh((1, 2), ("data", "model"))
+        with axis_rules(RULES_2D, mesh):
+            y_skip, _ = apply_linear(layer, x, qcfg)
+            y_dense, _ = apply_linear(dense_layer, x, dense_layer.cfg)
+        np.testing.assert_array_equal(np.asarray(y_ref),
+                                      np.asarray(y_skip))
+        np.testing.assert_array_equal(np.asarray(y_ref),
+                                      np.asarray(y_dense))
+
+    @needs_devices(2)
+    def test_engine_tp_skip_parity(self):
+        """Served greedy tokens on a 2-way model mesh are identical with
+        the sparsity skip on and off, with shard-aligned structured
+        zeros that keep the re-sliced metadata skippable."""
+        from repro.configs import get_config
+        from repro.core.config import PSQ_TERNARY
+        from repro.models import init_model
+        from repro.serve import EngineConfig, ServeEngine
+
+        def shard_aligned_sparsify(node):
+            # zero the first META_BLOCK columns of each 2-way shard half
+            if isinstance(node, dict):
+                out = {}
+                for k, v in node.items():
+                    if (k == "w" and hasattr(v, "ndim") and v.ndim in (2, 3)
+                            and v.shape[-1] >= 4 * META_BLOCK
+                            and v.shape[-1] % (2 * META_BLOCK) == 0):
+                        w = np.asarray(v).copy()
+                        half = w.shape[-1] // 2
+                        w[..., :META_BLOCK] = 0.0
+                        w[..., half:half + META_BLOCK] = 0.0
+                        out[k] = jnp.asarray(w)
+                    else:
+                        out[k] = shard_aligned_sparsify(v)
+                return out
+            if isinstance(node, (list, tuple)):
+                return type(node)(shard_aligned_sparsify(v) for v in node)
+            return node
+
+        base = get_config("tinyllama-1.1b").reduced()
+        mesh = jax.make_mesh((1, 2), ("data", "model"))
+        outs = {}
+        for skip in (True, False):
+            qcfg = dataclasses.replace(PSQ_TERNARY,
+                                       kernel_backend="reference",
+                                       xbar_rows=64, sparsity_skip=skip)
+            cfg = base.with_quant(qcfg)
+            params = shard_aligned_sparsify(
+                init_model(jax.random.PRNGKey(0), cfg))
+            packed = pack_tree_psq(params, qcfg, PackedModelCache(),
+                                   mesh=mesh)
+            eng = ServeEngine(params=packed, cfg=cfg,
+                              ecfg=EngineConfig(max_batch=2, max_len=48),
+                              mesh=mesh)
             rng = np.random.RandomState(5)
             for _ in range(3):
                 eng.submit(rng.randint(0, cfg.vocab_size, size=6),

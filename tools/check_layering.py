@@ -1,0 +1,170 @@
+#!/usr/bin/env python
+"""Layering check for the serving stack (CI docs job).
+
+Three static guarantees, no imports executed (pure ``ast``):
+
+1. **No import cycles** anywhere in ``repro`` — the module-level
+   import graph must be a DAG. Deferred (function-body) imports are
+   ignored: they cannot cycle at import time, and the serving layers
+   use them deliberately (e.g. the bench imports the launcher's
+   streaming front-end lazily).
+
+2. **Serve-layer ordering** — the engine decomposition
+   (docs/architecture.md) assigns each ``repro.serve`` module a layer:
+   ``paged_kv``/``cache`` (leaves) < ``scheduler`` (decisions) <
+   ``state`` (placement) < ``executor`` (execution) < ``engine``
+   (facade) < ``__init__``. A module may only import serve modules
+   from a strictly lower layer — so scheduling can never grow a
+   dependency on execution, and the facade stays the only place the
+   layers meet.
+
+3. **Module-size budget** — no file under ``src/repro/serve/`` may
+   exceed 900 lines, and the facade ``engine.py`` must stay at or
+   under 500: growth has to land in the layer that owns it, not
+   accrete back onto the engine.
+
+    python tools/check_layering.py [--root src/repro]
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Set
+
+SERVE_LAYERS: Dict[str, int] = {
+    "repro.serve.paged_kv": 0,
+    "repro.serve.cache": 0,
+    "repro.serve.scheduler": 1,
+    "repro.serve.state": 2,
+    "repro.serve.executor": 3,
+    "repro.serve.engine": 4,
+    "repro.serve": 5,          # the package __init__ re-exports
+}
+SERVE_SIZE_BUDGET = 900        # lines, every src/repro/serve/*.py
+ENGINE_SIZE_BUDGET = 500       # lines, the facade specifically
+
+
+def module_name(py: Path, root: Path) -> str:
+    rel = py.relative_to(root.parent).with_suffix("")
+    parts = list(rel.parts)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def build_graph(root: Path) -> Dict[str, Set[str]]:
+    """Module-level ``repro.*`` import graph (deferred imports excluded).
+
+    ``from repro.x import y`` depends on the submodule ``repro.x.y``
+    when one exists, else on the module ``repro.x`` itself — so a
+    package ``__init__`` re-exporting its submodules is a parent of
+    them, not a cycle with them.
+    """
+    mods: Dict[str, Path] = {module_name(p, root): p
+                             for p in sorted(root.rglob("*.py"))}
+    graph: Dict[str, Set[str]] = {}
+    for name, path in mods.items():
+        deps: Set[str] = set()
+        tree = ast.parse(path.read_text(), filename=str(path))
+        for node in tree.body:
+            if isinstance(node, ast.Import):
+                deps.update(a.name for a in node.names
+                            if a.name in mods)
+            elif (isinstance(node, ast.ImportFrom) and node.module
+                  and node.module.startswith("repro")):
+                for a in node.names:
+                    sub = f"{node.module}.{a.name}"
+                    if sub in mods:
+                        deps.add(sub)
+                    elif node.module in mods:
+                        deps.add(node.module)
+        graph[name] = deps - {name}
+    return graph
+
+
+def find_cycle(graph: Dict[str, Set[str]]) -> Optional[List[str]]:
+    """First cycle in the import graph (DFS three-color), or None."""
+    WHITE, GREY, BLACK = 0, 1, 2
+    color = {m: WHITE for m in graph}
+    stack: List[str] = []
+
+    def visit(m: str) -> Optional[List[str]]:
+        color[m] = GREY
+        stack.append(m)
+        for dep in sorted(graph.get(m, ())):
+            if color.get(dep, BLACK) == GREY:
+                return stack[stack.index(dep):] + [dep]
+            if color.get(dep, BLACK) == WHITE:
+                cyc = visit(dep)
+                if cyc:
+                    return cyc
+        stack.pop()
+        color[m] = BLACK
+        return None
+
+    for m in sorted(graph):
+        if color[m] == WHITE:
+            cyc = visit(m)
+            if cyc:
+                return cyc
+    return None
+
+
+def check_serve_layers(graph: Dict[str, Set[str]]) -> List[str]:
+    errs: List[str] = []
+    for mod, deps in sorted(graph.items()):
+        if mod not in SERVE_LAYERS:
+            continue
+        for dep in sorted(deps):
+            if dep in SERVE_LAYERS and SERVE_LAYERS[dep] >= SERVE_LAYERS[mod]:
+                errs.append(
+                    f"{mod} (layer {SERVE_LAYERS[mod]}) imports {dep} "
+                    f"(layer {SERVE_LAYERS[dep]}): serve modules may only "
+                    f"import strictly lower layers"
+                )
+    return errs
+
+
+def check_sizes(root: Path) -> List[str]:
+    errs: List[str] = []
+    for py in sorted((root / "serve").rglob("*.py")):
+        n = len(py.read_text().splitlines())
+        budget = (ENGINE_SIZE_BUDGET if py.name == "engine.py"
+                  else SERVE_SIZE_BUDGET)
+        if n > budget:
+            errs.append(f"{py}: {n} lines exceeds the "
+                        f"{budget}-line budget")
+    return errs
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default="src/repro",
+                    help="package root to scan")
+    args = ap.parse_args()
+    root = Path(args.root)
+    if not root.is_dir():
+        raise SystemExit(f"not a directory: {root}")
+
+    graph = build_graph(root)
+    errs: List[str] = []
+    cyc = find_cycle(graph)
+    if cyc:
+        errs.append("import cycle: " + " -> ".join(cyc))
+    errs.extend(check_serve_layers(graph))
+    errs.extend(check_sizes(root))
+
+    if errs:
+        for e in errs:
+            print(f"[check_layering] FAIL {e}")
+        return 1
+    n_serve = sum(1 for m in graph if m in SERVE_LAYERS)
+    print(f"[check_layering] ok: {len(graph)} modules acyclic, "
+          f"{n_serve} serve modules layered, sizes within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
